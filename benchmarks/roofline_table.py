@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        --single results/dryrun_single.json --multi results/dryrun_multi.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt(x):
+    return f"{x:.2e}" if isinstance(x, float) else str(x)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "6ND/HLO | peak GiB/chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         SHAPE_ORDER.index(r["shape"])
+                                         if r["shape"] in SHAPE_ORDER else 9)):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped: {r['reason'][:60]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | "
+                        f"{r.get('error', '')[:60]} | | |")
+            continue
+        peak = (r.get("memory") or {}).get("peak_bytes")
+        peak_s = f"{peak/2**30:.2f}" if peak else "n/a"
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"**{r['dominant'].replace('_s','')}** | "
+            f"{ratio:.3f} | {peak_s} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"**{r['dominant'].replace('_s','')}** | n/a | {peak_s} |")
+    return "\n".join(rows)
+
+
+def lowering_matrix(recs):
+    archs = sorted({r["arch"] for r in recs})
+    rows = ["| arch | " + " | ".join(SHAPE_ORDER) + " |",
+            "|---|" + "---|" * len(SHAPE_ORDER)]
+    idx = {(r["arch"], r["shape"]): r for r in recs}
+    for a in archs:
+        cells = []
+        for s in SHAPE_ORDER:
+            r = idx.get((a, s))
+            cells.append({"ok": "✓", "skipped": "skip", None: "—"}.get(
+                r["status"] if r else None, "✗"))
+        rows.append(f"| {a} | " + " | ".join(cells) + " |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="results/dryrun_single.json")
+    ap.add_argument("--multi", default="results/dryrun_multi.json")
+    args = ap.parse_args()
+    with open(args.single) as f:
+        single = json.load(f)
+    print("## Roofline (single pod 16x16, per-chip terms)\n")
+    print(roofline_table(single))
+    try:
+        with open(args.multi) as f:
+            multi = json.load(f)
+        print("\n## Multi-pod (2x16x16) lowering matrix\n")
+        print(lowering_matrix(multi))
+    except FileNotFoundError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

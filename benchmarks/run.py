@@ -1,0 +1,180 @@
+"""Benchmark harness — one entry per paper figure/table + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig2,scheduler
+
+Output: ``name,us_per_call,derived`` CSV rows.
+  * fig2_*   — paper Fig. 2: data-quality selection strategies (omega sweep)
+               under (6,2) / (8,4) label flips. derived = final global acc.
+  * fig3_*   — paper Fig. 3: full DQS with the wireless model. derived =
+               final global acc.
+  * table1_setup — paper SS V-A protocol wiring (50 UEs, groups of 50, 5
+               malicious). derived = mean c_k cost of a round.
+  * scheduler — Alg. 2 microbenchmark at K=50. derived = objective.
+  * kernels  — Pallas (interpret) vs jnp-oracle agreement + oracle timing.
+  * roofline — reads results/dryrun_single.json; derived = dominant-term
+               seconds per (arch, shape).
+
+Reduced scale (n_train/rounds) keeps the full harness ~minutes on 1 CPU; the
+full paper protocol lives in examples/poisoning_study.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *a, n=5, **kw):
+    fn(*a, **kw)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*a, **kw)
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# ---------------------------------------------------------------------- #
+def bench_fig2(pair, tag, n_train=12_000, rounds=8, seeds=(0, 1)):
+    """Paper Fig. 2: select 5 UEs by V_k under different omega weightings —
+    diversity-only (w1=0), reputation-only (w2=0), both equal."""
+    from repro.federated.simulation import run_experiment
+    for label, omega in [("div_only", (0.0, 1.0)), ("rep_only", (1.0, 0.0)),
+                         ("both", (0.5, 0.5))]:
+        t0 = time.perf_counter()
+        accs = [run_experiment("top_value", pair, seed=s, omega=omega,
+                               n_train=n_train, n_test=2000, rounds=rounds)["acc"]
+                for s in seeds]
+        us = (time.perf_counter() - t0) * 1e6 / len(seeds)
+        emit(f"fig2_{tag}_{label}", us,
+             round(float(np.mean([a[-1] for a in accs])), 4))
+
+
+def bench_fig3(pair, tag, n_train=12_000, rounds=8, seeds=(0, 1)):
+    """Paper Fig. 3: DQS under the wireless model (constrained regime)."""
+    from repro.configs.base import FeelConfig
+    from repro.federated.simulation import run_experiment
+    cfg = FeelConfig(model_size_bits=5e6 * 8)
+    for label, omega in [("div_only", (0.0, 1.0)), ("rep_only", (1.0, 0.0)),
+                         ("both", (0.5, 0.5))]:
+        t0 = time.perf_counter()
+        accs = [run_experiment("dqs", pair, cfg=cfg, seed=s, omega=omega,
+                               n_train=n_train, n_test=2000, rounds=rounds)["acc"]
+                for s in seeds]
+        us = (time.perf_counter() - t0) * 1e6 / len(seeds)
+        emit(f"fig3_{tag}_{label}", us,
+             round(float(np.mean([a[-1] for a in accs])), 4))
+
+
+def bench_table1_setup():
+    """Paper SS V-A/Table I wiring: one full scheduling round at K=50."""
+    from repro.configs.base import FeelConfig
+    from repro.core.wireless import WirelessModel
+    cfg = FeelConfig()
+    rng = np.random.default_rng(0)
+    wm = WirelessModel(cfg, rng)
+    sizes = rng.integers(1, 31, cfg.n_ues) * 50.0
+    cpu = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
+
+    def round_once():
+        ch = wm.draw_channels()
+        tt = wm.train_time(sizes, cpu)
+        return wm.cost(ch.gains, tt)
+
+    us, costs = _timeit(round_once, n=20)
+    feas = costs[costs <= cfg.n_ues]
+    emit("table1_cost_eval", us, round(float(feas.mean()), 3))
+
+
+def bench_scheduler():
+    """Alg. 2 at the paper's K=50 — scheduling must be cheap vs a 300s round."""
+    from repro.configs.base import FeelConfig
+    from repro.core.scheduler import dqs_schedule
+    cfg = FeelConfig()
+    rng = np.random.default_rng(0)
+    values = rng.uniform(0, 1, cfg.n_ues)
+    costs = rng.integers(1, 10, cfg.n_ues)
+    us, s = _timeit(dqs_schedule, values, costs, cfg, n=200)
+    emit("scheduler_dqs_k50", us, round(s.objective(), 4))
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    B, H, S, D = 1, 4, 512, 64
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = ops.flash_attention(q, k, v)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, k, v))))
+    us, _ = _timeit(lambda: jax.block_until_ready(
+        ref.flash_attention_ref(q, k, v)), n=10)
+    emit("kernel_flash_attn_err", us, f"{err:.2e}")
+
+    x = jax.random.normal(ks[0], (2, 256, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 256, 4)))
+    A = -jnp.exp(0.1 * jax.random.normal(ks[2], (4,)))
+    Bc = jax.random.normal(ks[3], (2, 256, 4, 16))
+    y = ops.ssd_scan(x, dt, A, Bc, Bc, chunk=64)
+    yr, _ = ref.ssd_ref(x, dt, A, Bc, Bc)
+    emit("kernel_ssd_err", 0.0, f"{float(jnp.max(jnp.abs(y - yr))):.2e}")
+
+    st = jax.random.normal(ks[0], (8, 100_000))
+    w = jnp.abs(jax.random.normal(ks[1], (8,)))
+    agg = ops.weighted_aggregate(st, w)
+    err = float(jnp.max(jnp.abs(agg - ref.weighted_aggregate_ref(st, w))))
+    us, _ = _timeit(lambda: jax.block_until_ready(
+        ref.weighted_aggregate_ref(st, w)), n=10)
+    emit("kernel_fedavg_agg_err", us, f"{err:.2e}")
+
+
+def bench_roofline(path="results/dryrun_single.json"):
+    if not os.path.exists(path):
+        emit("roofline_missing", 0.0, path)
+        return
+    with open(path) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok":
+            continue
+        dom = r["dominant"]
+        emit(f"roofline_{r['arch']}_{r['shape']}", r[dom] * 1e6,
+             f"{dom}:{r[dom]:.3e}s;ratio:{(r.get('useful_flops_ratio') or 0):.3f}")
+
+
+BENCHES = {
+    "fig2": lambda: (bench_fig2((6, 2), "easy"), bench_fig2((8, 4), "hard")),
+    "fig3": lambda: (bench_fig3((6, 2), "easy"), bench_fig3((8, 4), "hard")),
+    "table1": bench_table1_setup,
+    "scheduler": bench_scheduler,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""DQS-scheduled federated fine-tuning of a transformer LM — the paper's
+technique composed with the framework's model zoo, using the jax-native
+cohort step (shard_map + masked weighted psum) from DESIGN.md §3.
+
+    PYTHONPATH=src python examples/federated_llm.py --rounds 4
+
+Each of N clients holds a domain-skewed synthetic token stream (non-IID);
+per round the server scores clients with the data-quality value V_k
+(diversity over token histograms + reputation from held-out perplexity gaps)
+and schedules with the greedy knapsack. Selected clients run local SGD inside
+the distributed cohort step; aggregation is the masked weighted psum.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig
+from repro.configs.base import FeelConfig, ModelConfig
+from repro.core import (WirelessModel, data_quality_value, diversity_index,
+                        dqs_schedule, gini_simpson)
+from repro.data.tokens import make_stream
+from repro.federated.distributed import make_cohort_step
+from repro.models import api
+
+CFG = ModelConfig(name="fed-lm", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=512,
+                  dtype="float32", citation="[in-repo federated-LM demo]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    n = args.clients
+    rng = np.random.default_rng(0)
+    feel = FeelConfig(n_ues=n, model_size_bits=5e6 * 8)
+    wireless = WirelessModel(feel, rng)
+
+    # non-IID client corpora: domain-shifted Markov streams
+    streams = [make_stream(8_000, CFG.vocab_size, seed=1, domain=d)
+               for d in range(n)]
+    sizes = np.array([len(s) for s in streams], float)
+    divs = np.array([gini_simpson(s % 10, 10) for s in streams])
+    reputation = np.ones(n)
+    ages = np.ones(n)
+
+    key = jax.random.PRNGKey(0)
+    params = api.init(CFG, key)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+
+    def loss_fn(p, batch):
+        loss, _ = api.loss(CFG, p, batch)
+        return loss
+
+    cohort = make_cohort_step(mesh, loss_fn, lr=5e-3, local_steps=4)
+    held_out = make_stream(2_000, CFG.vocab_size, seed=99, domain=999)
+
+    def ppl(p):
+        tok = jnp.asarray(held_out[: 16 * args.seq].reshape(16, args.seq))
+        l, _ = api.loss(CFG, p, {"tokens": tok})
+        return float(l)
+
+    base = ppl(params)
+    print(f"round -: held-out loss {base:.4f}")
+    for t in range(args.rounds):
+        I = diversity_index(divs, sizes, ages, feel.gamma)
+        V = data_quality_value(reputation, I, feel)
+        tt = wireless.train_time(sizes / 64.0,
+                                 rng.uniform(feel.cpu_hz_min,
+                                             feel.cpu_hz_max, n))
+        costs = wireless.cost(wireless.draw_channels().gains, tt)
+        sched = dqs_schedule(V, costs, feel)
+        select = jnp.asarray(sched.x.astype(np.float32))
+
+        # one batch per client, stacked on the client axis
+        starts = rng.integers(0, 7_000, n)
+        toks = np.stack([s[i:i + args.seq + 1][None]
+                         for s, i in zip(streams, starts)])  # (n,1,S+1)
+        batch = {"tokens": jnp.asarray(toks[:, :, :args.seq])}
+        # pad client axis up to the device count
+        ndev = mesh.shape["data"]
+        if n % ndev:
+            pad = ndev - n % ndev
+            batch = {k: jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+                     for k, v in batch.items()}
+            select = jnp.pad(select, (0, pad))
+            w = jnp.pad(jnp.asarray(sizes, jnp.float32), (0, pad))
+        else:
+            w = jnp.asarray(sizes, jnp.float32)
+
+        new_params = cohort(params, batch, w, select)
+        l = ppl(new_params)
+        ages += 1
+        ages[sched.selected] = 1
+        # reputation: clients whose inclusion round didn't help lose standing
+        reputation[sched.selected] = np.clip(
+            reputation[sched.selected] - feel.eta * 0.1 * np.sign(l - base),
+            0, 1)
+        base, params = l, new_params
+        print(f"round {t}: held-out loss {l:.4f} "
+              f"selected={sched.selected.tolist()}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

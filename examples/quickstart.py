@@ -1,0 +1,46 @@
+"""Quickstart: data-quality based scheduling (DQS) for FEEL in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's setup at reduced scale — 50 UEs with non-IID synthetic
+MNIST, 5 label-flipping attackers — and runs a few FedAvg rounds under DQS,
+printing the accuracy curve and which UEs the scheduler trusted.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.base import FeelConfig
+from repro.core.poisoning import EASY_PAIR, LabelFlipAttack, pick_malicious
+from repro.data.partition import partition
+from repro.data.synthetic_mnist import generate
+from repro.federated.server import FeelServer
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = FeelConfig(rounds=6)
+    print("generating synthetic MNIST (offline stand-in)...")
+    train, test = generate(12_000, 2_000, seed=0)
+    malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+    clients = partition(train, cfg.n_ues, rng, malicious,
+                        LabelFlipAttack(*EASY_PAIR))
+    print(f"{cfg.n_ues} UEs, malicious: {sorted(malicious.tolist())}, "
+          f"attack {EASY_PAIR[0]}->{EASY_PAIR[1]}")
+
+    server = FeelServer(cfg, clients, test, rng, policy="dqs")
+    for t in range(cfg.rounds):
+        log = server.run_round(t)
+        print(f"round {t}: acc={log.global_acc:.3f} "
+              f"selected={len(log.selected)} "
+              f"(malicious among them: {log.n_malicious_selected})")
+    rep = server.reputation.values
+    print(f"\nfinal mean reputation  honest:    "
+          f"{np.delete(rep, malicious).mean():.3f}")
+    print(f"final mean reputation  malicious: {rep[malicious].mean():.3f}")
+
+
+if __name__ == "__main__":
+    main()

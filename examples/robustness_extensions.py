@@ -1,0 +1,95 @@
+"""Beyond-paper robustness extensions (the paper's §VI future-work items):
+
+  1. MODEL poisoning (sign-flip / boosted updates) instead of data poisoning —
+     does Eq. 1's test-set evaluation still catch the attacker?
+  2. Dishonest accuracy reporting (lie_boost) — the beta1 term's target.
+  3. Adaptive omega schedule (core.quality.adaptive_weights) vs fixed
+     omega1=omega2 — implements the paper's own §V-B.2 suggestion.
+  4. Scale: K=100 UEs (paper §VI: "larger number of UEs").
+
+    PYTHONPATH=src python examples/robustness_extensions.py [--fast]
+
+Writes results/robustness.json.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.base import FeelConfig
+from repro.federated.simulation import run_experiment
+
+
+def curve(tag, seeds, **kw):
+    runs = [run_experiment(seed=s, **kw) for s in seeds]
+    out = {
+        "acc": [round(float(a), 4) for a in np.mean([r["acc"] for r in runs], 0)],
+        "rep_gap": round(float(np.mean(
+            [r["final_reputation_honest"] - r["final_reputation_malicious"]
+             for r in runs])), 4),
+        "malicious_selected_mean": [round(float(m), 2) for m in np.mean(
+            [r["malicious_selected"] for r in runs], 0)],
+    }
+    print(f"{tag:40s} acc={out['acc'][-1]:.3f} repgap={out['rep_gap']:+.3f} "
+          f"malsel_last={out['malicious_selected_mean'][-1]}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    kw = (dict(n_train=10_000, n_test=2_000, rounds=6) if args.fast
+          else dict(n_train=20_000, n_test=4_000, rounds=10))
+    seeds = (0, 1)
+    cfg5 = FeelConfig(model_size_bits=5e6 * 8)
+    results = {}
+    t0 = time.time()
+
+    # 1) model poisoning: sign-flip and boosted
+    for scale, tag in [(-1.0, "signflip"), (4.0, "boost4")]:
+        results[f"model_poison_{tag}_dqs"] = curve(
+            f"model_poison_{tag}_dqs", seeds, policy="dqs",
+            attack_pair=(8, 4), cfg=cfg5, model_poison_scale=scale, **kw)
+        results[f"model_poison_{tag}_random"] = curve(
+            f"model_poison_{tag}_random", seeds, policy="random",
+            attack_pair=(8, 4), cfg=cfg5, model_poison_scale=scale, **kw)
+    results["model_poison_control"] = curve(
+        "model_poison_control", seeds, policy="dqs", attack_pair=(8, 4),
+        cfg=cfg5, no_attack=True, **kw)
+
+    # 2) dishonest reporting: label flip + inflated self-reported accuracy
+    for boost in (0.0, 0.3):
+        results[f"lie_{boost}"] = curve(
+            f"lie_boost_{boost}", seeds, policy="dqs", attack_pair=(8, 4),
+            cfg=cfg5, lie_boost=boost, **kw)
+
+    # 3) adaptive omega vs fixed
+    results["fixed_omega"] = curve(
+        "fixed_omega", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg5, **kw)
+    results["adaptive_omega"] = curve(
+        "adaptive_omega", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg5,
+        adaptive_omega=True, **kw)
+
+    # 4) scale: K=100 UEs, 10 malicious
+    cfg100 = dataclasses.replace(cfg5, n_ues=100, n_malicious=10)
+    results["k100_dqs"] = curve(
+        "k100_dqs", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg100, **kw)
+    results["k100_random"] = curve(
+        "k100_random", seeds, policy="random", attack_pair=(8, 4),
+        cfg=cfg100, **kw)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/robustness.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote results/robustness.json ({time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_pytree, restore, save, save_pytree
+
+__all__ = ["load_pytree", "restore", "save", "save_pytree"]

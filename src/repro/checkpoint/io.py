@@ -1,0 +1,79 @@
+"""Msgpack-based pytree checkpointing (offline container: no orbax).
+
+Layout: <dir>/<step>/state.msgpack + meta.json. Arrays are stored as
+(dtype, shape, raw bytes); bfloat16 round-trips via a uint16 view.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x):
+    x = np.asarray(jax.device_get(x))
+    if x.dtype == jnp.bfloat16:
+        return {"dtype": _BF16, "shape": list(x.shape),
+                "data": x.view(np.uint16).tobytes()}
+    return {"dtype": str(x.dtype), "shape": list(x.shape),
+            "data": x.tobytes()}
+
+
+def _decode_leaf(d):
+    if d["dtype"] == _BF16:
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    arr = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"leaves": [_encode_leaf(x) for x in leaves],
+               "treedef": str(treedef)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_pytree(like: Any, path: str) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    new = [_decode_leaf(d) for d in payload["leaves"]]
+    assert len(new) == len(leaves), (
+        f"checkpoint has {len(payload['leaves'])} leaves, expected {len(leaves)}")
+    return jax.tree.unflatten(treedef, new)
+
+
+def save(ckpt_dir: str, step: int, state: Any, meta: Optional[dict] = None):
+    d = os.path.join(ckpt_dir, f"{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    save_pytree(state, os.path.join(d, "state.msgpack"))
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(n) for n in os.listdir(ckpt_dir) if n.isdigit()]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None):
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    d = os.path.join(ckpt_dir, f"{step:08d}")
+    state = load_pytree(like, os.path.join(d, "state.msgpack"))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    return state, meta

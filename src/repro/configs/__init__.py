@@ -1,0 +1,7 @@
+from repro.configs.base import (FeelConfig, InputShape, MLAConfig, ModelConfig,
+                                MoEConfig, SHAPES, SSMConfig, TrainConfig)
+from repro.configs.registry import ARCHS, get, grid, list_archs, reduced
+
+__all__ = ["FeelConfig", "InputShape", "MLAConfig", "ModelConfig", "MoEConfig",
+           "SHAPES", "SSMConfig", "TrainConfig", "ARCHS", "get", "grid",
+           "list_archs", "reduced"]

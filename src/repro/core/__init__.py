@@ -1,0 +1,25 @@
+"""The paper's contribution: data-quality based scheduling (DQS) for FEEL.
+
+diversity (Eq. 2) + reputation (Eq. 1) -> data-quality value (Eq. 3);
+wireless cost model (Eq. 4-7, 9); greedy-knapsack scheduler (Algorithm 2)
+with baseline policies; label-flip poisoning (§III-B.1).
+"""
+from repro.core.diversity import diversity_index, gini_simpson, normalize
+from repro.core.poisoning import (EASY_PAIR, HARD_PAIR, LabelFlipAttack,
+                                  pick_malicious)
+from repro.core.quality import adaptive_weights, data_quality_value
+from repro.core.reputation import ReputationTracker
+from repro.core.scheduler import (POLICIES, Schedule, best_channel_schedule,
+                                  brute_force_schedule, dqs_schedule,
+                                  max_count_schedule, random_schedule,
+                                  top_value_schedule)
+from repro.core.wireless import ChannelState, WirelessModel, dbm_to_watt
+
+__all__ = [
+    "diversity_index", "gini_simpson", "normalize",
+    "EASY_PAIR", "HARD_PAIR", "LabelFlipAttack", "pick_malicious",
+    "adaptive_weights", "data_quality_value", "ReputationTracker",
+    "POLICIES", "Schedule", "best_channel_schedule", "brute_force_schedule",
+    "dqs_schedule", "max_count_schedule", "random_schedule",
+    "top_value_schedule", "ChannelState", "WirelessModel", "dbm_to_watt",
+]

@@ -1,0 +1,45 @@
+"""Dataset diversity evaluation (paper §III-B.3, Eq. 2).
+
+``I_k = sum_i gamma_i * v_i`` over normalised metrics
+i in {elements diversity, dataset size, age}. For classification the elements
+diversity is the Gini-Simpson index over label frequencies (paper §V-B.1,
+following [10] arXiv:2102.09491).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def gini_simpson(labels: np.ndarray, n_classes: int) -> float:
+    """1 - sum p_c^2; 0 for a single-class set, (C-1)/C for uniform."""
+    if labels.size == 0:
+        return 0.0
+    counts = np.bincount(labels.astype(int), minlength=n_classes)
+    p = counts / counts.sum()
+    return float(1.0 - np.sum(p * p))
+
+
+def normalize(values: np.ndarray) -> np.ndarray:
+    """Min-max normalise a metric across UEs to [0, 1]."""
+    values = np.asarray(values, float)
+    lo, hi = values.min(), values.max()
+    if hi - lo < 1e-12:
+        return np.ones_like(values)
+    return (values - lo) / (hi - lo)
+
+
+def diversity_index(element_diversity: np.ndarray,
+                    dataset_sizes: np.ndarray,
+                    ages: np.ndarray,
+                    gamma: Sequence[float]) -> np.ndarray:
+    """Eq. 2 across all K UEs. ``ages`` = rounds since last participation
+    (higher -> staler -> more valuable to refresh)."""
+    v = np.stack([
+        normalize(element_diversity),
+        normalize(dataset_sizes),
+        normalize(ages),
+    ])
+    g = np.asarray(gamma, float)[:, None]
+    return (g * v).sum(0)

@@ -1,0 +1,24 @@
+"""Data-quality value (paper §III-B.4, Eq. 3): V_k = w1 * R_k + w2 * I_k."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import FeelConfig
+
+
+def data_quality_value(reputation: np.ndarray, diversity: np.ndarray,
+                       cfg: FeelConfig) -> np.ndarray:
+    return cfg.omega_rep * reputation + cfg.omega_div * diversity
+
+
+def adaptive_weights(round_t: int, total_rounds: int,
+                     cfg: FeelConfig) -> FeelConfig:
+    """Beyond-paper extension motivated by the paper's own §V-B.2 observation:
+    diversity matters early, reputation matters late. Linearly anneals
+    (omega_div, omega_rep) from (1, 0)-leaning to (0, 1)-leaning over training.
+    """
+    import dataclasses
+    frac = round_t / max(total_rounds - 1, 1)
+    total = cfg.omega_rep + cfg.omega_div
+    w_rep = total * (0.25 + 0.5 * frac)
+    return dataclasses.replace(cfg, omega_rep=w_rep, omega_div=total - w_rep)

@@ -1,0 +1,148 @@
+"""Joint UE selection + bandwidth allocation (paper §IV, Algorithm 2).
+
+Problem (8) — maximise ``sum_k x_k V_k`` subject to the round deadline (8b),
+total bandwidth (8c/8d) and binary selection (8e) — is knapsack-equivalent
+(NP-hard). DQS solves it greedily: compute each UE's bandwidth *cost* ``c_k``
+(minimum number of uniform 1/K fractions meeting its minimum rate, Eq. 9),
+order by ``V_k / c_k`` decreasing, and pack into the budget of K fractions.
+
+Baseline policies used by the paper's comparison figures are provided too,
+plus a brute-force exact solver for small K (test oracle for the NP-hard
+claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import FeelConfig
+from repro.core.wireless import WirelessModel
+
+
+@dataclasses.dataclass
+class Schedule:
+    x: np.ndarray          # (K,) bool selection
+    alpha: np.ndarray      # (K,) bandwidth fractions, sum <= 1
+    cost: np.ndarray       # (K,) c_k in fractions (K+1 = infeasible)
+    value: np.ndarray      # (K,) V_k used for the decision
+
+    @property
+    def selected(self) -> np.ndarray:
+        return np.flatnonzero(self.x)
+
+    def objective(self) -> float:
+        return float(self.value[self.x].sum())
+
+
+def dqs_schedule(values: np.ndarray, costs: np.ndarray,
+                 cfg: FeelConfig) -> Schedule:
+    """Algorithm 2: greedy knapsack by V_k / c_k over a budget of K fractions."""
+    K = cfg.n_ues
+    order = np.argsort(-values / costs, kind="stable")
+    x = np.zeros(K, bool)
+    alpha = np.zeros(K)
+    budget = K
+    for k in order:
+        c = int(costs[k])
+        if c > K:                      # cannot meet the deadline at all
+            continue
+        if budget - c >= 0:
+            x[k] = True
+            alpha[k] = c / K
+            budget -= c
+        if budget <= 0:
+            break
+    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+
+
+def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
+                         cfg: FeelConfig, max_k: int = 16) -> Schedule:
+    """Exact knapsack by enumeration — oracle for tests (K <= max_k)."""
+    K = len(values)
+    assert K <= max_k, "brute force limited to small K"
+    best, best_x = -1.0, np.zeros(K, bool)
+    feas = [k for k in range(K) if costs[k] <= K]
+    for r in range(len(feas) + 1):
+        for combo in itertools.combinations(feas, r):
+            c = sum(int(costs[k]) for k in combo)
+            if c <= K:
+                v = float(values[list(combo)].sum()) if combo else 0.0
+                if v > best:
+                    best = v
+                    best_x = np.zeros(K, bool)
+                    best_x[list(combo)] = True
+    alpha = np.where(best_x, costs / K, 0.0)
+    return Schedule(x=best_x, alpha=alpha, cost=costs, value=values)
+
+
+# ---------------------------------------------------------------------- #
+# Baseline policies (paper §II / §V comparisons)
+# ---------------------------------------------------------------------- #
+def random_schedule(values, costs, cfg, rng) -> Schedule:
+    """Random feasible packing (ignores data quality)."""
+    K = cfg.n_ues
+    order = rng.permutation(K)
+    x = np.zeros(K, bool)
+    alpha = np.zeros(K)
+    budget = K
+    for k in order:
+        c = int(costs[k])
+        if c <= K and budget - c >= 0:
+            x[k] = True
+            alpha[k] = c / K
+            budget -= c
+    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+
+
+def best_channel_schedule(values, costs, cfg, gains) -> Schedule:
+    """Nishio & Yonetani-style: prioritise good channels (min cost first)."""
+    K = cfg.n_ues
+    order = np.argsort(costs * K - gains / (gains.max() + 1e-12), kind="stable")
+    x = np.zeros(K, bool)
+    alpha = np.zeros(K)
+    budget = K
+    for k in order:
+        c = int(costs[k])
+        if c <= K and budget - c >= 0:
+            x[k] = True
+            alpha[k] = c / K
+            budget -= c
+    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+
+
+def max_count_schedule(values, costs, cfg) -> Schedule:
+    """Zeng et al.-style: maximise the number of scheduled UEs."""
+    K = cfg.n_ues
+    order = np.argsort(costs, kind="stable")
+    x = np.zeros(K, bool)
+    alpha = np.zeros(K)
+    budget = K
+    for k in order:
+        c = int(costs[k])
+        if c <= K and budget - c >= 0:
+            x[k] = True
+            alpha[k] = c / K
+            budget -= c
+    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+
+
+def top_value_schedule(values, cfg, n: int) -> Schedule:
+    """Paper §V-B.1: pick the n highest-V_k UEs (no wireless constraint)."""
+    K = cfg.n_ues
+    order = np.argsort(-values, kind="stable")[:n]
+    x = np.zeros(K, bool)
+    x[order] = True
+    alpha = np.where(x, 1.0 / max(n, 1), 0.0)
+    costs = np.ones(K, int)
+    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+
+
+POLICIES = {
+    "dqs": dqs_schedule,
+    "random": random_schedule,
+    "best_channel": best_channel_schedule,
+    "max_count": max_count_schedule,
+}

@@ -1,0 +1,97 @@
+"""Wireless edge model (paper §III-C, Eq. 4-7, 9).
+
+OFDMA uplink from K UEs to one BS at the centre of a square cell. Channel
+gain = large-scale pathloss x Rayleigh small-scale fading:
+``|g_k|^2 = d_k^-alpha |h_k|^2``. Achievable rate with bandwidth fraction
+``a_k`` (Eq. 4):
+
+    r_k = a_k B log2(1 + g_k P_k / (a_k B N0))
+
+Round deadline T bounds ``t_train + t_up`` (Eq. 5); training time follows the
+cycles/bit model (Eq. 6); upload time ``t_up = s / r_k`` (Eq. 7). The DQS
+bandwidth *cost* c_k (Eq. 9) is the minimum number of uniform 1/K fractions
+that meets the UE's minimum rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import FeelConfig
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) / 1000.0
+
+
+@dataclasses.dataclass
+class ChannelState:
+    """Per-round channel realisation for K UEs."""
+    gains: np.ndarray          # |g_k|^2, linear
+    distances: np.ndarray      # d_k in metres
+
+    @property
+    def k(self) -> int:
+        return self.gains.shape[0]
+
+
+class WirelessModel:
+    def __init__(self, cfg: FeelConfig, rng: np.random.Generator):
+        self.cfg = cfg
+        self.rng = rng
+        half = cfg.cell_side_m / 2.0
+        xy = rng.uniform(-half, half, size=(cfg.n_ues, 2))
+        self.distances = np.maximum(np.linalg.norm(xy, axis=1), 1.0)
+        self.p_watt = dbm_to_watt(cfg.tx_power_dbm)
+        self.n0 = dbm_to_watt(cfg.noise_dbm_hz)     # W/Hz
+
+    def draw_channels(self) -> ChannelState:
+        """Rayleigh |h|^2 ~ Exp(1); gains = d^-alpha |h|^2."""
+        h2 = self.rng.exponential(1.0, size=self.distances.shape)
+        gains = self.distances ** (-self.cfg.pathloss_exp) * h2
+        return ChannelState(gains=gains, distances=self.distances)
+
+    # ------------------------------------------------------------------ #
+    # Eq. 4 / 7 / 6
+    # ------------------------------------------------------------------ #
+    def rate(self, gains: np.ndarray, alpha: np.ndarray) -> np.ndarray:
+        """Eq. 4 — vectorised; rate is 0 where alpha == 0."""
+        cfg = self.cfg
+        alpha = np.asarray(alpha, float)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            snr = gains * self.p_watt / (alpha * cfg.bandwidth_hz * self.n0)
+            r = alpha * cfg.bandwidth_hz * np.log2(1.0 + snr)
+        return np.where(alpha > 0, r, 0.0)
+
+    def upload_time(self, gains, alpha) -> np.ndarray:
+        r = self.rate(gains, alpha)
+        with np.errstate(divide="ignore"):
+            return np.where(r > 0, self.cfg.model_size_bits / r, np.inf)
+
+    def train_time(self, dataset_sizes: np.ndarray,
+                   cpu_hz: np.ndarray) -> np.ndarray:
+        """Eq. 6: t = eps * |D_k| * zeta / f."""
+        cfg = self.cfg
+        bits = dataset_sizes * cfg.sample_bits
+        return cfg.local_epochs * bits * cfg.cycles_per_bit / cpu_hz
+
+    # ------------------------------------------------------------------ #
+    # Eq. 9 — bandwidth cost in uniform 1/K fractions
+    # ------------------------------------------------------------------ #
+    def min_rate(self, train_times: np.ndarray) -> np.ndarray:
+        """r_min = s / (T - t_train); inf when the deadline is already blown."""
+        slack = self.cfg.deadline_s - train_times
+        with np.errstate(divide="ignore"):
+            return np.where(slack > 0, self.cfg.model_size_bits / slack, np.inf)
+
+    def cost(self, gains: np.ndarray, train_times: np.ndarray) -> np.ndarray:
+        """c_k = min{c in [1,K] : r_k(c/K) >= r_min}; K+1 when infeasible."""
+        K = self.cfg.n_ues
+        r_min = self.min_rate(train_times)                      # (K,)
+        cs = np.arange(1, K + 1) / K                            # (K,) fractions
+        rates = self.rate(gains[:, None], cs[None, :])          # (K, K)
+        feasible = rates >= r_min[:, None]
+        c = np.where(feasible.any(1), feasible.argmax(1) + 1, K + 1)
+        return c.astype(int)

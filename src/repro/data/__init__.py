@@ -1,0 +1,8 @@
+from repro.data.partition import (ClientData, GROUP_SIZE, label_histogram,
+                                  partition)
+from repro.data.synthetic_mnist import Dataset, N_CLASSES, generate
+from repro.data.tokens import batches, make_stream, zipf_probs
+
+__all__ = ["ClientData", "GROUP_SIZE", "label_histogram", "partition",
+           "Dataset", "N_CLASSES", "generate", "batches", "make_stream",
+           "zipf_probs"]

@@ -1,0 +1,37 @@
+"""Synthetic LM token streams (offline container): structured pseudo-text with
+learnable bigram statistics, for the end-to-end LM training driver and the
+federated-LLM example. A Zipfian unigram base plus a class-conditioned Markov
+kernel gives each "domain" (client) its own distribution — mirroring non-IID
+federated text."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def zipf_probs(vocab: int, s: float = 1.1) -> np.ndarray:
+    p = 1.0 / np.arange(1, vocab + 1) ** s
+    return p / p.sum()
+
+
+def make_stream(n_tokens: int, vocab: int, seed: int = 0,
+                domain: int = 0) -> np.ndarray:
+    """Markov stream: next-token dist = mix(zipf, shifted-by-domain zipf)."""
+    rng = np.random.default_rng(seed + 7919 * domain)
+    base = zipf_probs(vocab)
+    toks = np.empty(n_tokens, np.int32)
+    t = int(rng.integers(vocab))
+    for i in range(n_tokens):
+        toks[i] = t
+        if rng.uniform() < 0.6:               # bigram continuation
+            t = (t * 31 + 7 + domain) % vocab
+        else:
+            t = int(rng.choice(vocab, p=base))
+    return toks
+
+
+def batches(stream: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    """Yield {tokens: (B, S)} windows forever."""
+    n = len(stream) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield {"tokens": np.stack([stream[s:s + seq] for s in starts])}

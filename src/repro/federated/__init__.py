@@ -1,0 +1,7 @@
+from repro.federated.aggregation import fedavg, fedavg_stacked
+from repro.federated.client import ClientReport, local_train
+from repro.federated.server import FeelServer, RoundLog
+from repro.federated.simulation import averaged, run_experiment
+
+__all__ = ["fedavg", "fedavg_stacked", "ClientReport", "local_train",
+           "FeelServer", "RoundLog", "averaged", "run_experiment"]

@@ -1,0 +1,36 @@
+"""FedAvg aggregation (Alg. 1 line 13): g <- sum_k (D_k / D_t) * Omega_k."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg(updates: Sequence, weights: Sequence[float]):
+    """Weighted average of parameter pytrees. Weights are normalised."""
+    w = np.asarray(weights, np.float64)
+    assert w.sum() > 0, "empty aggregation"
+    w = (w / w.sum()).astype(np.float32)
+
+    def combine(*leaves):
+        out = jnp.zeros_like(leaves[0], jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            out = out + wi * leaf.astype(jnp.float32)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(combine, *updates)
+
+
+def fedavg_stacked(stacked, weights):
+    """Aggregate updates stacked on axis 0 (device-cohort layout):
+    leaf (N, ...) x weights (N,) -> (...). Mirrors the Pallas
+    ``weighted_aggregate`` kernel; used by the distributed cohort step."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def combine(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(combine, stacked)

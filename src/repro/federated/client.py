@@ -1,0 +1,45 @@
+"""Federated client: local training on the UE's (possibly poisoned) dataset
+and the self-reported local accuracy of Alg. 1 line 11.
+
+A malicious UE is not assumed to lie about the *number* it reports — it
+truthfully evaluates on its own poisoned data, which is exactly why the
+paper's Eq. 1 uses the server-side test-set gap to catch it. An optional
+``lie_boost`` models UEs that additionally inflate their report."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.data.partition import ClientData
+from repro.models.mlp import mlp_accuracy, mlp_sgd_epoch
+
+
+@dataclasses.dataclass
+class ClientReport:
+    ue_id: int
+    params: dict
+    acc_local: float
+    n_samples: int
+
+
+def local_train(client: ClientData, global_params, epochs: int,
+                lr: float = 0.1, batch_size: int = 50,
+                lie_boost: float = 0.0, model_poison=None) -> ClientReport:
+    x = jax.numpy.asarray(client.data.x)
+    y = jax.numpy.asarray(client.data.y)
+    params = global_params
+    for _ in range(epochs):
+        params = mlp_sgd_epoch(params, x, y, lr, batch_size)
+    acc = float(mlp_accuracy(params, x, y))
+    if client.malicious and model_poison is not None:
+        # model-poisoning (§VI future work): manipulate the update itself;
+        # the reported local accuracy is still that of the honest-looking
+        # locally-trained model — the lie the server must catch via Eq. 1.
+        params = model_poison.apply(global_params, params)
+    if client.malicious and lie_boost:
+        acc = min(acc + lie_boost, 1.0)
+    return ClientReport(ue_id=client.ue_id, params=params,
+                        acc_local=acc, n_samples=client.size)

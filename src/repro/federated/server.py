@@ -1,0 +1,162 @@
+"""FEEL server (Alg. 1): per-round schedule -> local train -> evaluate ->
+reputation update -> FedAvg aggregate.
+
+The server sees only what the paper allows it to see: dataset *metadata*
+(size, label histogram for the diversity index, staleness), self-reported
+local accuracies, uploaded models evaluated on the public test set, and
+channel state. It never touches raw client data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FeelConfig
+from repro.core import (ReputationTracker, WirelessModel, data_quality_value,
+                        diversity_index, dqs_schedule, gini_simpson,
+                        top_value_schedule)
+from repro.core.scheduler import (Schedule, best_channel_schedule,
+                                  max_count_schedule, random_schedule)
+from repro.data.partition import ClientData, label_histogram
+from repro.data.synthetic_mnist import Dataset, N_CLASSES
+from repro.federated.aggregation import fedavg
+from repro.federated.client import local_train
+from repro.models.mlp import mlp_accuracy, mlp_init
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    selected: np.ndarray
+    global_acc: float
+    n_malicious_selected: int
+    objective: float
+    values: np.ndarray
+    reputations: np.ndarray
+    source_acc: float = float("nan")   # accuracy on the attacked class
+
+
+class FeelServer:
+    """policy: 'dqs' | 'random' | 'best_channel' | 'max_count' | 'top_value'.
+    'top_value' reproduces §V-B.1 (pure data-quality selection, no wireless).
+    """
+
+    def __init__(self, cfg: FeelConfig, clients: List[ClientData],
+                 test: Dataset, rng: np.random.Generator,
+                 policy: str = "dqs", lr: float = 0.1,
+                 adaptive_omega: bool = False, lie_boost: float = 0.0,
+                 watch_class: Optional[int] = None, model_poison=None):
+        self.cfg = cfg
+        self.clients = clients
+        self.test = test
+        self.rng = rng
+        self.policy = policy
+        self.lr = lr
+        self.adaptive_omega = adaptive_omega
+        self.lie_boost = lie_boost
+        self.watch_class = watch_class     # the attack's source class
+        self.model_poison = model_poison
+
+        self.wireless = WirelessModel(cfg, rng)
+        self.reputation = ReputationTracker(cfg)
+        self.params = mlp_init(jax.random.PRNGKey(int(rng.integers(1 << 31))))
+        self.ages = np.ones(cfg.n_ues)          # rounds since last selected
+        self.cpu_hz = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
+        self.sizes = np.array([c.size for c in clients], float)
+        # UEs report label histograms once (metadata); poisoned labels are
+        # what the UE *believes*, so the histogram reflects the flip.
+        self.divs = np.array([gini_simpson(c.data.y, N_CLASSES)
+                              for c in clients])
+        self.histograms = [label_histogram(c.data, N_CLASSES) for c in clients]
+        # Interpretation decision (DESIGN.md): Eq. 1's acc_test is evaluated
+        # on the test subset restricted to the classes a UE claims to hold —
+        # otherwise the reputation punishes honest-but-skewed (non-IID) UEs
+        # exactly as hard as poisoners, which contradicts the paper's Fig. 2.
+        self._test_masks = [np.isin(test.y, np.flatnonzero(h > 0))
+                            for h in self.histograms]
+        self.logs: List[RoundLog] = []
+
+    # ------------------------------------------------------------------ #
+    def _values(self, round_t: int) -> np.ndarray:
+        cfg = self.cfg
+        if self.adaptive_omega:
+            from repro.core import adaptive_weights
+            cfg = adaptive_weights(round_t, cfg.rounds, cfg)
+        I = diversity_index(self.divs, self.sizes, self.ages, cfg.gamma)
+        return data_quality_value(self.reputation.values, I, cfg)
+
+    def _schedule(self, values: np.ndarray) -> Schedule:
+        cfg = self.cfg
+        gains = self.wireless.draw_channels().gains
+        t_train = self.wireless.train_time(self.sizes, self.cpu_hz)
+        costs = self.wireless.cost(gains, t_train)
+        if self.policy == "dqs":
+            return dqs_schedule(values, costs, cfg)
+        if self.policy == "random":
+            return random_schedule(values, costs, cfg, self.rng)
+        if self.policy == "best_channel":
+            return best_channel_schedule(values, costs, cfg, gains)
+        if self.policy == "max_count":
+            return max_count_schedule(values, costs, cfg)
+        if self.policy == "top_value":
+            return top_value_schedule(values, cfg, cfg.min_selected)
+        raise KeyError(self.policy)
+
+    # ------------------------------------------------------------------ #
+    def run_round(self, t: int) -> RoundLog:
+        cfg = self.cfg
+        values = self._values(t)
+        sched = self._schedule(values)
+        sel = sched.selected
+        if sel.size == 0:       # degenerate channel draw — skip the round
+            sel = np.array([int(np.argmax(values))])
+
+        reports = [local_train(self.clients[k], self.params,
+                               cfg.local_epochs, self.lr,
+                               lie_boost=self.lie_boost,
+                               model_poison=self.model_poison) for k in sel]
+
+        # server-side evaluation of every uploaded model (Alg. 1 line 14) on
+        # the classes each UE claims to hold (see __init__ note)
+        tx = jax.numpy.asarray(self.test.x)
+        ty = jax.numpy.asarray(self.test.y)
+        acc_test = np.empty(len(reports))
+        for i, (r, k) in enumerate(zip(reports, sel)):
+            m = self._test_masks[k]
+            acc_test[i] = float(mlp_accuracy(
+                r.params, jax.numpy.asarray(self.test.x[m]),
+                jax.numpy.asarray(self.test.y[m]))) if m.any() else 0.0
+        acc_local = np.array([r.acc_local for r in reports])
+        self.reputation.update(sel, acc_local, acc_test)
+
+        # aggregate
+        self.params = fedavg([r.params for r in reports],
+                             [r.n_samples for r in reports])
+        g_acc = float(mlp_accuracy(self.params, tx, ty))
+        src_acc = float("nan")
+        if self.watch_class is not None:
+            m = self.test.y == self.watch_class
+            if m.any():
+                src_acc = float(mlp_accuracy(
+                    self.params, jax.numpy.asarray(self.test.x[m]),
+                    jax.numpy.asarray(self.test.y[m])))
+
+        # ages: selected reset, others grow (staleness metric of Eq. 2)
+        self.ages += 1.0
+        self.ages[sel] = 1.0
+
+        log = RoundLog(
+            round=t, selected=sel, global_acc=g_acc,
+            n_malicious_selected=sum(self.clients[k].malicious for k in sel),
+            objective=sched.objective(), values=values.copy(),
+            reputations=self.reputation.values.copy(), source_acc=src_acc)
+        self.logs.append(log)
+        return log
+
+    def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
+        for t in range(rounds or self.cfg.rounds):
+            self.run_round(t)
+        return self.logs

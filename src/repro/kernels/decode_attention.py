@@ -1,0 +1,88 @@
+"""Pallas TPU flash-decode: single-query attention over a long KV cache.
+
+One new token attends to a cache of T positions (validity bounded by
+``length``). Grid (B, H, n_kv) with the cache dimension innermost; the online
+softmax state lives in VMEM scratch. The cache is laid out (B, T, H, D) — the
+same layout the serving cache uses — and tiled (block_k, D) per step, so HBM
+reads are contiguous along the cache. This is the decode-side hot spot of
+decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale, block_k, n_kv):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, length, *, block_k=256, interpret=False):
+    """q (B,H,D); k/v (B,T,H,D); attend to cache positions < length.
+    Returns (B,H,D)."""
+    B, H, D = q.shape
+    T = k.shape[1]
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    n_kv = T // block_k
+    scale = D ** -0.5
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv=n_kv)
+    q4 = q[:, :, None, :]                                  # (B,H,1,D)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q4, k, v)
+    return out

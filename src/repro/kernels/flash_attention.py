@@ -1,0 +1,105 @@
+"""Pallas TPU flash attention (causal / sliding-window), online softmax.
+
+Grid (B, H, n_q, n_kv) with the KV dimension innermost; running max / sum /
+accumulator live in VMEM scratch across KV steps. Block shapes default to
+(128, head_dim) — MXU-aligned (128 lanes) and sized so the working set
+(q + k + v + acc tiles, fp32 acc) stays well under ~16 MB VMEM:
+128x128x4B x 4 tiles = 256 KiB.
+
+TPU adaptation note: this is the standard HBM->VMEM tiled online-softmax
+schedule; there is no shared-memory banking / warp-level trick to port.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, block_q, block_k, n_kv, causal, window, seq_q,
+                  seq_kv):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # global positions (queries right-aligned when seq_q < seq_kv)
+    qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (seq_kv - seq_q)
+    kj = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret", "scale"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                    interpret=False):
+    """q (B,H,S,D), k/v (B,H,T,D) -> (B,H,S,D)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    n_q, n_kv = S // block_q, T // block_k
+    scale = scale if scale is not None else D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv=n_kv, causal=causal, window=window, seq_q=S, seq_kv=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU-only container the kernels execute with ``interpret=True``
+(`REPRO_PALLAS_INTERPRET=1`, the default off-TPU); on TPU they compile to
+Mosaic. ``use_pallas()`` gates the model-level dispatch (models default to
+the XLA path; tests and benchmarks exercise the kernels explicitly).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.weighted_aggregate import weighted_aggregate as _agg
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") not in ("0", "false")
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, **kw):
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_interpret(), **kw)
+
+
+def decode_attention(q, k, v, length, **kw):
+    return _decode(q, k, v, length, interpret=_interpret(), **kw)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, **kw):
+    """Broadcasts grouped B/C (B,L,G,N) to per-head before the kernel."""
+    H = x.shape[2]
+    if B_.shape[2] != H:
+        rep = H // B_.shape[2]
+        B_ = jnp.repeat(B_, rep, axis=2)
+        C_ = jnp.repeat(C_, rep, axis=2)
+    return _ssd(x, dt, A, B_, C_, chunk=chunk, interpret=_interpret(), **kw)
+
+
+def moe_gemm(x, w, **kw):
+    return _moe_gemm(x, w, interpret=_interpret(), **kw)
+
+
+def weighted_aggregate(stacked, weights, **kw):
+    return _agg(stacked, weights, interpret=_interpret(), **kw)
+
+
+def weighted_aggregate_tree(updates_stacked, weights, **kw):
+    """Apply the FedAvg kernel leaf-wise over a pytree of stacked updates."""
+    def per(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return weighted_aggregate(flat, weights, **kw).reshape(leaf.shape[1:])
+    return jax.tree.map(per, updates_stacked)
+
+
+__all__ = ["flash_attention", "decode_attention", "ssd_scan", "moe_gemm",
+           "weighted_aggregate", "weighted_aggregate_tree", "use_pallas",
+           "ref"]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels are
+validated against in tests, shape/dtype-swept)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q (B,H,S,D), k/v (B,H,T,D) -> (B,H,S,D). fp32 softmax."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        i = jnp.arange(S)[:, None] + (T - S)     # right-aligned
+        j = jnp.arange(T)[None, :]
+        m = j <= i
+        if window is not None:
+            m &= (i - j) < window
+        logits = jnp.where(m[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k, v, length):
+    """q (B,H,D); k/v (B,T,H,D); attend to positions < length. -> (B,H,D)."""
+    B, H, D = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bhd,bthd->bht", q, k).astype(jnp.float32) * D ** -0.5
+    mask = jnp.arange(T)[None, :] < length
+    logits = jnp.where(mask[:, None, :] if mask.ndim == 2 else mask,
+                       logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p.astype(v.dtype), v)
+
+
+def ssd_ref(x, dt, A, B_, C_):
+    """Naive sequential SSD recurrence (independent of models.ssm).
+
+    x (B,L,H,P); dt (B,L,H) fp32; A (H,); B_/C_ (B,L,H,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t * B_t (x) x_t;  y_t = C_t . h_t
+    Returns (y (B,L,H,P), final_state (B,H,N,P)).
+    """
+    Bb, L, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt * A)                          # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", bt.astype(jnp.float32),
+                         (xt * dtt[..., None]).astype(jnp.float32))
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def moe_gemm_ref(buf, w):
+    """(E,C,d) x (E,d,f) -> (E,C,f)."""
+    return jnp.einsum("ecd,edf->ecf", buf, w)
+
+
+def weighted_aggregate_ref(stacked, weights):
+    """(N, M) x (N,) -> (M,): sum_i w_i x_i / sum_i w_i (FedAvg, Alg. 1)."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+    return jnp.einsum("n,nm->m", w.astype(jnp.float32),
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)

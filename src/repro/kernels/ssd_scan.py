@@ -1,0 +1,92 @@
+"""Pallas TPU SSD (Mamba2) chunked scan.
+
+Grid (B, H, n_chunks), chunk dimension innermost and sequential; the running
+inter-chunk state (N x P, fp32) lives in VMEM scratch — it is never
+materialised in HBM, and neither is the (Q x Q) intra-chunk decay matrix
+(built in VMEM per chunk). This is precisely the memory-traffic hot spot the
+XLA path pays for (fp32 L-matrices in HBM; see EXPERIMENTS.md §Perf) and the
+reason this kernel exists.
+
+Per chunk (math identical to models.ssm.ssd_chunked / kernels.ref.ssd_ref):
+    cum   = cumsum(dt * A)                       (Q,)
+    Lmat  = tril(exp(cum_i - cum_j))             (Q, Q)
+    y     = ((C B^T) * Lmat) @ (x dt)  +  (C exp(cum)) @ state
+    state = exp(cum_Q) * state + (B exp(cum_Q - cum))^T @ (x dt)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)               # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    B_ = b_ref[0, :, 0].astype(jnp.float32)              # (Q, N)
+    C_ = c_ref[0, :, 0].astype(jnp.float32)              # (Q, N)
+    A = a_ref[pl.program_id(1)]                          # per-head scalar
+
+    cum = jnp.cumsum(dt * A)                             # (Q,) <= 0
+    seg = cum[:, None] - cum[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(iq >= jq, jnp.exp(seg), 0.0)        # (Q, Q)
+
+    xdt = x * dt[:, None]                                # (Q, P)
+    g = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, Q)
+    y = jax.lax.dot_general(g * lmat, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    state = state_ref[...]                               # (N, P)
+    y += jax.lax.dot_general(C_ * jnp.exp(cum)[:, None], state,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    decay_end = jnp.exp(cum[-1] - cum)                   # (Q,)
+    s_local = jax.lax.dot_general(B_ * decay_end[:, None], xdt,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (N,P)
+    state_ref[...] = state * jnp.exp(cum[-1]) + s_local
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=False):
+    """x (B,L,H,P); dt (B,L,H) fp32; A (H,); B_/C_ (B,L,H,N) -> y (B,L,H,P).
+
+    Head-broadcast of grouped B/C is done by the caller (ops.py)."""
+    Bb, L, H, P = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # A (H,)... sliced below
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt.astype(jnp.float32),
+      B_, C_)

@@ -1,0 +1,52 @@
+"""Pallas TPU FedAvg weighted aggregation (the paper's Alg. 1 line 13):
+
+    g = sum_k (D_k / D_t) Omega_k
+
+over N stacked client updates, flattened to (N, M). Grid (n_m,) over the
+parameter dimension; the normalised weight vector sits in SMEM; each step
+reduces an (N, block_m) tile to (block_m,). The aggregation is bandwidth-bound
+(reads N x M, writes M), so block_m just needs to keep tiles VMEM-resident —
+default 2048 floats x N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(w_ref, x_ref, o_ref, *, n):
+    x = x_ref[...].astype(jnp.float32)                    # (N, bm)
+    acc = jnp.zeros((x.shape[1],), jnp.float32)
+    for i in range(n):                                    # N is small, unroll
+        acc += w_ref[i] * x[i]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def weighted_aggregate(stacked, weights, *, block_m=2048, interpret=False):
+    """stacked (N, M), weights (N,) -> (M,) weighted mean."""
+    N, M = stacked.shape
+    block_m = min(block_m, M)
+    pad = (-M) % block_m
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Mp = M + pad
+    w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(jnp.float32)
+
+    kernel = functools.partial(_agg_kernel, n=N)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // block_m,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((N, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Mp,), stacked.dtype),
+        interpret=interpret,
+    )(w, stacked)
+    return out[:M]

@@ -1,0 +1,325 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh with 512 placeholder host devices, and extract roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+    PYTHONPATH=src python -m repro.launch.dryrun --cohort   # paper's FEEL step
+
+Results are appended to --out (JSON), one record per (arch, shape, mesh);
+already-present records are skipped unless --force.
+"""
+# The VERY FIRST lines — before ANY other import — jax locks the device count
+# on first init.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, TrainConfig, get, list_archs  # noqa: E402
+from repro.launch import roofline as rl                  # noqa: E402
+from repro.launch.mesh import ADAFACTOR_ARCHS, make_production_mesh  # noqa: E402,F401
+from repro.launch.steps import (make_decode_step, make_prefill_step,  # noqa: E402
+                                make_train_step)
+from repro.models import api                             # noqa: E402
+from repro.sharding import (activation_specs, batch_specs,  # noqa: E402
+                            data_axes, opt_state_specs, param_specs)
+
+
+
+def _sds_with(tree, spec_tree, mesh):
+    def mk(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, s))
+    return jax.tree.map(mk, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _act_specs(mesh, shape_kind, batch_shardable=True):
+    dax = data_axes(mesh)
+    bax = dax if len(dax) > 1 else dax[0]
+    if shape_kind in ("train", "prefill"):
+        return {"act": P(bax, None, None), "logits": P(bax, None, "model")}
+    b = bax if batch_shardable else None
+    return {"dec": P(b, None, None)}
+
+
+def _compile_one(cfg, shape, mesh, optimizer: str, extra_specs_fn=None):
+    """Lower + compile one (cfg, shape) on mesh. Returns (compiled, t_lower,
+    t_compile)."""
+    t0 = time.time()
+    params_sds = jax.eval_shape(functools.partial(api.init, cfg),
+                                jax.random.PRNGKey(0))
+    pspecs = param_specs(cfg, params_sds, mesh)
+    params_in = _sds_with(params_sds, pspecs, mesh)
+    bspecs = batch_specs(cfg, shape, mesh)
+
+    n_data = 1
+    for a in data_axes(mesh):
+        n_data *= mesh.shape[a]
+    batch_shardable = shape.global_batch % n_data == 0 \
+        and shape.global_batch >= n_data
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(optimizer=optimizer,
+                           remat=os.environ.get("REPRO_REMAT_OFF",
+                                                "0") == "0")
+        from repro.optim import make_optimizer
+        opt = make_optimizer(tcfg)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = opt_state_specs(tcfg.optimizer, params_sds, pspecs, mesh)
+        opt_in = _sds_with(opt_sds, ospecs, mesh)
+        step_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                            sharding=NamedSharding(mesh, bspecs[k]))
+                    for k, v in api.input_specs(cfg, shape).items()}
+        fn = make_train_step(cfg, tcfg)
+        args = (params_in, opt_in, step_in, batch_in)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                            sharding=NamedSharding(mesh, bspecs[k]))
+                    for k, v in api.input_specs(cfg, shape).items()}
+        args = (params_in, batch_in)
+    else:  # decode
+        specs = api.input_specs(cfg, shape)
+        cache_in = _sds_with(specs["cache"], bspecs["cache"], mesh)
+        token_in = jax.ShapeDtypeStruct(
+            specs["token"].shape, specs["token"].dtype,
+            sharding=NamedSharding(mesh, bspecs["token"]))
+        fn = make_decode_step(cfg)
+        args = (params_in, cache_in, token_in)
+        if os.environ.get("REPRO_DONATE", "0") == "1":
+            fn = functools.partial(fn)
+            jit_fn = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+            with mesh, activation_specs(_act_specs(mesh, shape.kind,
+                                                   batch_shardable)):
+                lowered = jit_fn.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+            return compiled, t_lower, t_compile
+
+    specs = _act_specs(mesh, shape.kind, batch_shardable)
+    if extra_specs_fn is not None:
+        specs.update(extra_specs_fn(mesh, cfg) or {})
+    with mesh, activation_specs(specs):
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _extract(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = rl.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _n_blocks_variant(cfg, n_blocks: int):
+    """Config with the scan shortened to ``n_blocks`` super-blocks (encoder
+    scan shortened in lockstep for enc-dec). Used by the scan-trip-count
+    correction: XLA cost_analysis counts a while body ONCE."""
+    import dataclasses
+    kw = dict(n_layers=cfg.first_dense_layers + n_blocks * cfg.block_len,
+              block_len=cfg.block_len,
+              scan_unroll=n_blocks)     # trips=1 so cost_analysis sees all
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = n_blocks
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               extra_tags=None, cfg_override=None, label=None,
+               correct_scan: bool = True, extra_specs_fn=None,
+               optimizer_override=None) -> dict:
+    cfg = cfg_override or get(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": label or arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           **(extra_tags or {})}
+    ok, reason = api.supports_shape(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    optimizer = optimizer_override or (
+        "adafactor" if arch in ADAFACTOR_ARCHS else "adamw")
+    if shape.kind == "train":
+        rec["optimizer"] = optimizer
+    try:
+        compiled, t_lower, t_compile = _compile_one(cfg, shape, mesh,
+                                                    optimizer, extra_specs_fn)
+        flops, hbm, coll = _extract(compiled)
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            mem_rec = {}
+
+        # ---- scan-trip-count correction (see module docstring) ----
+        N = cfg.n_blocks
+        if N > 1 and correct_scan:
+            c1, _, _ = _compile_one(_n_blocks_variant(cfg, 1), shape, mesh,
+                                    optimizer, extra_specs_fn)
+            c2, _, _ = _compile_one(_n_blocks_variant(cfg, 2), shape, mesh,
+                                    optimizer, extra_specs_fn)
+            f1, b1, k1 = _extract(c1)
+            f2, b2, k2 = _extract(c2)
+            flops += (N - 1) * max(f2 - f1, 0.0)
+            hbm += (N - 1) * max(b2 - b1, 0.0)
+            coll = {op: coll[op] + (N - 1) * max(k2[op] - k1[op], 0)
+                    for op in coll}
+
+        terms = rl.roofline_terms(flops, hbm, coll)
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mf = rl.model_flops(cfg, tokens, train=(shape.kind == "train"))
+        n_chips = mesh.devices.size
+        rec.update(
+            status="ok", flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+            collectives=coll, **terms,
+            dominant=rl.dominant(terms),
+            model_flops_total=mf,
+            useful_flops_ratio=(mf / (flops * n_chips)) if flops else None,
+            memory=mem_rec, lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def print_rec(rec):
+    if rec.get("status") == "ok":
+        print(f"[ok]   {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"compute={rec['compute_s']:.3e}s memory={rec['memory_s']:.3e}s "
+              f"collective={rec['collective_s']:.3e}s dom={rec['dominant']} "
+              f"(lower {rec.get('lower_s', '-')}s "
+              f"compile {rec.get('compile_s', '-')}s)")
+    elif rec.get("status") == "skipped":
+        print(f"[skip] {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"{rec['reason']}")
+    else:
+        print(f"[ERR]  {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"{rec.get('error')}")
+
+
+def cohort_dryrun(multi_pod: bool, agg_dtype=None, label="feel-cohort-mlp") -> dict:
+    """Dry-run the paper's distributed FEEL round (DESIGN.md §3):
+    per-client local SGD + masked weighted psum aggregation."""
+    from repro.federated.distributed import (cohort_input_specs,
+                                             make_cohort_step)
+    from repro.models.mlp import mlp_init, mlp_loss
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = ("pod", "data") if multi_pod else ("data",)
+    n_clients = 1
+    for a in axes:
+        n_clients *= mesh.shape[a]
+    params = jax.eval_shape(mlp_init, jax.random.PRNGKey(0))
+    batch, vec, _ = cohort_input_specs(
+        mesh, n_clients, {"x": ((256, 784), jnp.float32),
+                          "y": ((256,), jnp.int32)}, axes)
+    step = make_cohort_step(mesh, mlp_loss, lr=0.1, local_steps=5,
+                            client_axes=axes, agg_dtype=agg_dtype)
+    rec = {"arch": label, "shape": f"clients_{n_clients}",
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        with mesh:
+            lowered = step.lower(params, batch, vec, vec)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = rl.collective_bytes(compiled.as_text())
+        terms = rl.roofline_terms(float(cost.get("flops", 0)),
+                                  float(cost.get("bytes accessed", 0)), coll)
+        rec.update(status="ok", collectives=coll, **terms,
+                   dominant=rl.dominant(terms),
+                   flops_per_chip=float(cost.get("flops", 0)),
+                   hbm_bytes_per_chip=float(cost.get("bytes accessed", 0)))
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cohort", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-correction", action="store_true",
+                    help="skip the scan-trip-count delta compiles (used for "
+                         "the multi-pod lowering-proof pass; the roofline "
+                         "table is single-pod)")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    jobs = []
+    if args.cohort:
+        for mp in meshes:
+            jobs.append(("cohort", None, mp))
+    else:
+        archs = list_archs() if (args.all or not args.arch) else [args.arch]
+        shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+        for a in archs:
+            for s in shapes:
+                for mp in meshes:
+                    jobs.append((a, s, mp))
+
+    for a, s, mp in jobs:
+        if a == "cohort":
+            rec = cohort_dryrun(mp)
+        else:
+            key = (a, s, "2x16x16" if mp else "16x16")
+            if key in done and not args.force:
+                continue
+            rec = lower_pair(a, s, mp, correct_scan=not args.no_correction)
+        print_rec(rec)
+        results = [r for r in results
+                   if (r["arch"], r["shape"], r["mesh"])
+                   != (rec["arch"], rec["shape"], rec["mesh"])]
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_err = sum(r.get("status") == "error" for r in results)
+    print(f"\n{len(results)} records, {n_err} errors -> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Jittable train / prefill / decode steps shared by the launcher, the
+dry-run and the benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import api
+from repro.optim import make_optimizer
+from repro.optim.optimizers import clip_by_global_norm
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    opt = make_optimizer(tcfg)
+
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p):
+            loss, metrics = api.loss(cfg, p, batch, remat=tcfg.remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = opt.update(params, grads, opt_state, step, tcfg.lr)
+        out = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, step + 1, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token):
+        return api.decode_step(cfg, params, cache, token)
+    return decode_step
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = api.init(cfg, key)
+    opt = make_optimizer(tcfg)
+    return params, opt.init(params), jnp.zeros((), jnp.int32)

@@ -1,0 +1,106 @@
+"""Production training launcher: builds the mesh, shards state per
+repro.sharding rules, and runs the jitted train step with checkpointing.
+
+On a real v5e deployment:
+    python -m repro.launch.train --arch yi-34b --shape train_4k --steps 1000
+On this CPU container it is exercised with --host-mesh (devices that exist)
+and reduced configs (--smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import restore, save
+from repro.configs import SHAPES, TrainConfig, get, reduced
+from repro.data.tokens import batches, make_stream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import init_state, make_train_step
+from repro.models import api
+from repro.sharding import (activation_specs, batch_specs, opt_state_specs,
+                            param_specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config variant")
+    ap.add_argument("--host-mesh", action="store_true",
+                    help="mesh over available devices instead of 16x16")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="override global batch (smoke runs)")
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+    shape = SHAPES[args.shape]
+    B = args.batch or shape.global_batch
+    S = args.seq or shape.seq_len
+
+    from repro.launch.mesh import ADAFACTOR_ARCHS   # optimizer policy
+    opt_name = args.optimizer or (
+        "adafactor" if args.arch in ADAFACTOR_ARCHS else "adamw")
+    tcfg = TrainConfig(optimizer=opt_name, lr=args.lr, remat=not args.smoke)
+
+    mesh = (make_host_mesh() if args.host_mesh
+            else make_production_mesh(multi_pod=args.multi_pod))
+    print(f"mesh {dict(mesh.shape)}  arch {cfg.name}  batch {B} seq {S}  "
+          f"opt {opt_name}")
+
+    with mesh:
+        params, opt_state, step = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+        pspecs = param_specs(cfg, params, mesh)
+        ospecs = opt_state_specs(opt_name, params, pspecs, mesh)
+        ns = lambda t, s: jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), t, s)
+        params = ns(params, pspecs)
+        opt_state = ns(opt_state, ospecs)
+
+        if args.ckpt:
+            state, meta = restore(args.ckpt, (params, opt_state, step))
+            if state is not None:
+                params, opt_state, step = ns(state[0], pspecs), \
+                    ns(state[1], ospecs), state[2]
+                print(f"restored step {meta['step']}")
+
+        dax = [a for a in mesh.axis_names if a != "model"]
+        bspec = P(tuple(dax) if len(dax) > 1 else dax[0], None)
+        train_step = jax.jit(make_train_step(cfg, tcfg),
+                             donate_argnums=(0, 1))
+
+        stream = make_stream(max(200_000, 2 * B * S), cfg.vocab_size, seed=0)
+        it = batches(stream, B, S, np.random.default_rng(0))
+        t0 = time.time()
+        for i in range(args.steps):
+            host = next(it)
+            batch = {"tokens": jax.device_put(
+                jnp.asarray(host["tokens"]), NamedSharding(mesh, bspec))}
+            params, opt_state, step, m = train_step(params, opt_state, step,
+                                                    batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {int(step):6d} loss={float(m['loss']):.4f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+            if args.ckpt and (i + 1) % args.ckpt_every == 0:
+                save(args.ckpt, int(step), (params, opt_state, step))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Family-dispatching public model API.
+
+    init(cfg, key)                     -> params
+    loss(cfg, params, batch)           -> (loss, metrics)
+    prefill(cfg, params, batch)        -> (last logits, cache)
+    decode_step(cfg, params, cache, t) -> (logits, cache)
+    cache_init(cfg, batch, seq_len)    -> decode cache
+    input_specs(cfg, shape)            -> dict of ShapeDtypeStruct model inputs
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+
+def _is_encdec(cfg):
+    return cfg.is_encoder_decoder
+
+
+def init(cfg: ModelConfig, key):
+    if _is_encdec(cfg):
+        return ed.encdec_init(key, cfg)
+    return tf.lm_init(key, cfg)
+
+
+def loss(cfg, params, batch, *, remat=False):
+    if _is_encdec(cfg):
+        return ed.encdec_loss(cfg, params, batch, remat=remat)
+    return tf.lm_loss(cfg, params, batch, remat=remat)
+
+
+def prefill(cfg, params, batch, target_len=None):
+    if _is_encdec(cfg):
+        return ed.encdec_prefill(cfg, params, batch["src"], batch["tokens"],
+                                 target_len or batch["tokens"].shape[1])
+    return tf.lm_prefill(cfg, params, batch["tokens"], target_len=target_len)
+
+
+def decode_step(cfg, params, cache, token):
+    if _is_encdec(cfg):
+        return ed.encdec_decode_step(cfg, params, cache, token)
+    return tf.lm_decode_step(cfg, params, cache, token)
+
+
+def cache_init(cfg, batch: int, seq_len: int, src_len: int = 0):
+    if _is_encdec(cfg):
+        return ed.encdec_cache_init(cfg, batch, seq_len,
+                                    src_len or _default_src_len(cfg, seq_len))
+    return tf.lm_cache_init(cfg, batch, seq_len)
+
+
+def _default_src_len(cfg, seq_len: int) -> int:
+    # audio: encoder frames; capped so a 500k-target dry-run doesn't imply a
+    # 500k-frame utterance (the shape is skipped for enc-dec anyway).
+    return min(seq_len, 4096)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+    No device allocation — safe for 512-fake-device dry-run lowering."""
+    f32 = jnp.dtype("float32")
+    i32 = jnp.dtype("int32")
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if _is_encdec(cfg):
+            # frontend stub: precomputed frame embeddings (B, S_src, d)
+            return {"src": sds((B, _default_src_len(cfg, S), cfg.d_model), f32),
+                    "tokens": sds((B, S), i32)}
+        return {"tokens": sds((B, S), i32)}
+    if shape.kind == "prefill":
+        if _is_encdec(cfg):
+            return {"src": sds((B, _default_src_len(cfg, S), cfg.d_model), f32),
+                    "tokens": sds((B, S), i32)}
+        return {"tokens": sds((B, S), i32)}
+    # decode: one new token + a cache of seq_len
+    cache = jax.eval_shape(lambda: cache_init(cfg, B, S))
+    return {"cache": cache, "token": sds((B, 1), i32)}
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape):
+    """(ok, reason) — long_500k policy from DESIGN §Arch-applicability."""
+    if shape.name == "long_500k":
+        if _is_encdec(cfg):
+            return False, "enc-dec speech decoder: 500k-token target sequence skipped (DESIGN.md)"
+        if cfg.family == "ssm" or cfg.attn_layer_period:
+            return True, "native sub-quadratic (SSM state / hybrid)"
+        if cfg.sliding_window or cfg.long_context_window:
+            return True, "sliding-window variant"
+        return False, "pure full-attention arch without SWA variant"
+    return True, ""

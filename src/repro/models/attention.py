@@ -1,0 +1,177 @@
+"""GQA attention (train / prefill / decode) with optional QKV-bias, QK-norm,
+sliding-window masks and ring-buffer decode caches.
+
+All functions are pure; parameters are plain pytrees. The jnp path here is the
+oracle; ``repro.kernels`` provides Pallas TPU implementations of the same math
+(flash attention / flash decode) validated against this module.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, dtype_of, ones, rms_norm
+
+
+# ---------------------------------------------------------------------- #
+# Params
+# ---------------------------------------------------------------------- #
+def attn_init(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dt),
+        "wk": dense_init(ks[1], (d, hkv * hd), dt),
+        "wv": dense_init(ks[2], (d, hkv * hd), dt),
+        "wo": dense_init(ks[3], (hq * hd, d), dt, fan_in=hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = ones((hd,), dt)
+        p["k_norm"] = ones((hd,), dt)
+    return p
+
+
+def _project_qkv(cfg, p, x):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------- #
+# Core scaled-dot-product with GQA grouping
+# ---------------------------------------------------------------------- #
+def sdpa(q, k, v, mask, scale: Optional[float] = None):
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D), mask broadcastable to (B,1,1,S,T)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq * D)
+
+
+def causal_window_mask(S: int, window: Optional[int], offset=0):
+    """(1,1,1,S,S) causal (+ optional sliding-window) mask."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return m[None, None, None]
+
+
+# ---------------------------------------------------------------------- #
+# Full-sequence apply (train / prefill)
+# ---------------------------------------------------------------------- #
+def attn_apply(cfg, p, x, *, window=None, positions=None):
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = _full_attention(cfg, q, k, v, window)
+    return out @ p["wo"], (k, v)
+
+
+def _full_attention(cfg, q, k, v, window):
+    """Dispatch between the jnp oracle and the Pallas flash kernel
+    (REPRO_USE_PALLAS=1; on CPU the kernel runs in interpret mode)."""
+    from repro.kernels import ops
+    B, S = q.shape[:2]
+    if ops.use_pallas() and S % 8 == 0:
+        G = q.shape[2] // k.shape[2]
+        kk = jnp.repeat(k, G, axis=2) if G > 1 else k
+        vv = jnp.repeat(v, G, axis=2) if G > 1 else v
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+            vv.transpose(0, 2, 1, 3), causal=True, window=window,
+            block_q=min(128, S), block_k=min(128, S))
+        return out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    mask = causal_window_mask(S, window)
+    return sdpa(q, k, v, mask)
+
+
+def cross_attn_apply(cfg, p, x, kv_cache):
+    """Decoder cross-attention; kv_cache = (k, v) from the encoder (no mask)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = kv_cache
+    mask = jnp.ones((1, 1, 1, 1, k.shape[1]), bool)
+    out = sdpa(q, k, v, mask)
+    return out @ p["wo"]
+
+
+def encoder_kv(cfg, p, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    B, S, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------- #
+# Single-token decode
+# ---------------------------------------------------------------------- #
+def attn_decode(cfg, p, x, cache_k, cache_v, index, *, slot_pos=None,
+                window=None):
+    """One decode step.
+
+    x (B,1,d); cache_k/v (B,C,Hkv,D) where C = max_seq (linear cache,
+    slot_pos None) or C = window (ring buffer, slot_pos (C,) absolute
+    positions of each slot, -1 when empty). ``index`` is the absolute position
+    of the new token. Keys are stored *rotated* (RoPE applied at write time).
+    Returns (y, new_k, new_v).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)            # (B,1,H*,D)
+    pos = jnp.full((B, 1), index)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    C = cache_k.shape[1]
+    slot = index % C if slot_pos is not None else index
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+
+    if slot_pos is not None:
+        new_slot_pos = slot_pos.at[slot].set(index)
+        valid = new_slot_pos >= 0
+    else:
+        j = jnp.arange(C)
+        valid = j <= index
+        if window is not None:
+            valid &= j > index - window
+        new_slot_pos = None
+    mask = valid[None, None, None, None, :]      # (1,1,1,1,C)
+    out = sdpa(q, cache_k, cache_v, mask)
+    return out @ p["wo"], cache_k, cache_v, new_slot_pos

@@ -1,0 +1,60 @@
+"""The paper's experimental model: a two-fully-connected-layer MLP for
+(synthetic) MNIST, trained with FedAvg (Section V: "simple multi-layer
+perceptron (MLP) model with two fully connected layers").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mlp_init(key, n_in: int = 28 * 28, n_hidden: int = 64, n_out: int = 10,
+             dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (n_in, n_hidden), dtype),
+        "b1": jnp.zeros((n_hidden,), dtype),
+        "w2": dense_init(k2, (n_hidden, n_out), dtype),
+        "b2": jnp.zeros((n_out,), dtype),
+    }
+
+
+def mlp_apply(params, x):
+    """x (B, 784) -> logits (B, 10)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_apply(params, batch["x"])
+    labels = batch["y"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def mlp_accuracy(params, x, y):
+    return jnp.mean((jnp.argmax(mlp_apply(params, x), -1) == y).astype(jnp.float32))
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnums=(4,))
+def mlp_sgd_epoch(params, x, y, lr, batch_size: int = 50):
+    """One epoch of mini-batch SGD over a client dataset (used by the
+    federated client loop; dataset is padded to a multiple of batch_size)."""
+    n = x.shape[0]
+    nb = max(n // batch_size, 1)
+
+    def body(params, i):
+        xb = jax.lax.dynamic_slice_in_dim(x, i * batch_size, batch_size)
+        yb = jax.lax.dynamic_slice_in_dim(y, i * batch_size, batch_size)
+        g = jax.grad(mlp_loss)(params, {"x": xb, "y": yb})
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, 0.0
+
+    params, _ = jax.lax.scan(body, params, jnp.arange(nb))
+    return params

@@ -1,0 +1,175 @@
+"""Mixture-of-experts MLP with sort-based dropless-with-capacity dispatch.
+
+Tokens are argsorted by assigned expert, gathered into a dense ``(E, C, d)``
+buffer (capacity ``C = top_k * T * cf / E``) and processed with grouped
+einsums, so compiled FLOPs are proportional to *active* parameters — unlike a
+dense all-experts formulation. Overflowing tokens are dropped (GShard-style).
+Shared experts (Qwen2-MoE / DeepSeek-V3) are a single fused SwiGLU of width
+``n_shared * d_ff_expert`` applied to every token.
+
+The expert dimension E shards over the ``model`` mesh axis (and over
+``data``x``model`` for the 256-expert DeepSeek config); GSPMD inserts the
+dispatch all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of, swiglu_apply, swiglu_init
+from repro.sharding.ctx import constrain
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_init(key, cfg, d_model=None):
+    m = cfg.moe
+    d = d_model or cfg.d_model
+    f = m.d_ff_expert
+    E = m.n_routed
+    ks = jax.random.split(key, 5)
+    dt = dtype_of(cfg)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wg": dense_init(ks[1], (E, d, f), dt),
+        "wu": dense_init(ks[2], (E, d, f), dt),
+        "wd": dense_init(ks[3], (E, f, d), dt, fan_in=f),
+    }
+    if m.n_shared:
+        p["shared"] = swiglu_init(ks[4], d, m.n_shared * f, dt)
+    return p
+
+
+def capacity(T: int, cfg) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * T * m.top_k / m.n_routed)
+    return max(_round_up(c, 8), 8)
+
+
+def moe_apply(cfg, p, x):
+    """x (..., d) -> (y (..., d), aux_loss scalar)."""
+    m = cfg.moe
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    G = m.dispatch_groups
+    if G > 1 and T % G == 0 and T // G >= m.top_k:
+        y, aux = _moe_grouped(cfg, p, x2.reshape(G, T // G, d))
+        return y.reshape(orig_shape), aux
+    E, K = m.n_routed, m.top_k
+    C = capacity(T, cfg)
+
+    logits = (x2.astype(jnp.float32) @ p["router"])               # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                           # (T,K)
+    if m.normalize_gates:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch/GShard) ----
+    me = probs.mean(0)                                            # (E,)
+    ce = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    # ---- sort-based dispatch ----
+    flat_e = idx.reshape(-1)                                      # (T*K,)
+    order = jnp.argsort(flat_e)                                   # stable
+    se = flat_e[order]
+    tok = order // K
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    offs = jnp.cumsum(counts) - counts                            # exclusive
+    pos_in_e = jnp.arange(T * K) - offs[se]
+    valid = pos_in_e < C
+    dest = jnp.where(valid, se * C + pos_in_e, E * C)             # sentinel row
+
+    gathered = constrain(x2[tok], "moe_gather")                   # (T*K, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(gathered)
+    # hillclimb lever (no-op without an active sharding ctx): pin the dispatch
+    # buffer to the expert layout so GSPMD routes tokens with all-to-all
+    # instead of replicating the scatter (see EXPERIMENTS.md §Perf)
+    buf = constrain(buf[: E * C].reshape(E, C, d), "moe_disp")
+
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+         * jnp.einsum("ecd,edf->ecf", buf, p["wu"]))
+    h = constrain(h, "moe_hidden")
+    y = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(E * C, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], 0)       # sentinel
+
+    w = gate.reshape(-1)[order].astype(x.dtype)
+    back = constrain(y[dest], "moe_gather")                       # (T*K, d)
+    out = jnp.zeros((T, d), x.dtype).at[tok].add(back * w[:, None])
+
+    if m.n_shared:
+        out = out + swiglu_apply(p["shared"], x2)
+    return out.reshape(orig_shape), aux
+
+
+def _moe_grouped(cfg, p, x3):
+    """Group-local dispatch (§Perf iteration 3). x3 (G, T, d).
+
+    Sort/scatter are per-group (G aligns with the data axis, so they never
+    cross shards); the only cross-shard movement is resharding the dense
+    (G, E, C, d) buffer to the expert layout before the grouped GEMM —
+    an all-to-all, which is the textbook MoE dispatch pattern.
+    """
+    m = cfg.moe
+    G, T, d = x3.shape
+    E, K = m.n_routed, m.top_k
+    C = capacity(T, cfg)
+
+    logits = x3.astype(jnp.float32) @ p["router"]                 # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                           # (G,T,K)
+    if m.normalize_gates:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (G * T * K)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    flat_e = idx.reshape(G, T * K)
+    order = jnp.argsort(flat_e, axis=1)                           # per group
+    se = jnp.take_along_axis(flat_e, order, 1)
+    tok = order // K                                              # (G,T*K)
+    counts = jax.vmap(
+        lambda fe: jnp.zeros(E, jnp.int32).at[fe].add(1))(flat_e)
+    offs = jnp.cumsum(counts, 1) - counts                         # (G,E)
+    pos = jnp.arange(T * K)[None] - jnp.take_along_axis(offs, se, 1)
+    valid = pos < C
+    dest = jnp.where(valid, se * C + pos, E * C)                  # (G,T*K)
+
+    gathered = constrain(jnp.take_along_axis(x3, tok[..., None], 1),
+                         "moe_local")                             # (G,T*K,d)
+    buf = jax.vmap(
+        lambda dst, g: jnp.zeros((E * C + 1, d), x3.dtype).at[dst].set(g)
+    )(dest, gathered)
+    # scatter output stays in the group-local layout; the switch to the
+    # expert layout below is then a standalone all-to-all reshard
+    buf = constrain(buf, "moe_local")
+    buf = buf[:, : E * C].reshape(G, E, C, d)
+    # two single-axis reshards (XLA lowers each to one all-to-all; a combined
+    # two-axis move degenerates to replication — see §Perf iteration log)
+    buf = constrain(buf, "moe_disp4a")    # model: d -> E
+    buf = constrain(buf, "moe_disp4")     # data: G -> E
+
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"]))
+         * jnp.einsum("gecd,edf->gecf", buf, p["wu"]))
+    h = constrain(h, "moe_hidden4")
+    y = constrain(jnp.einsum("gecf,efd->gecd", h, p["wd"]), "moe_out4")
+    # reshard back to the group-local layout before the local un-permute
+    y = constrain(y, "moe_disp4a")
+    y = constrain(y.reshape(G, E * C, d), "moe_local")
+    y = jnp.concatenate([y, jnp.zeros((G, 1, d), y.dtype)], 1)    # sentinel
+
+    back = constrain(jnp.take_along_axis(y, dest[..., None], 1),
+                     "moe_local")                                 # (G,T*K,d)
+    w = jnp.take_along_axis(gate.reshape(G, T * K), order, 1).astype(x3.dtype)
+    out = jax.vmap(
+        lambda t, b: jnp.zeros((T, d), x3.dtype).at[t].add(b)
+    )(tok, back * w[..., None])
+
+    if m.n_shared:
+        out = out + swiglu_apply(p["shared"], x3)
+    return out, aux

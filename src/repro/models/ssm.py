@@ -1,0 +1,165 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Full-sequence path uses the chunked SSD algorithm: quadratic attention-like
+intra-chunk term (MXU-friendly matmuls) + an inter-chunk state recurrence via
+``lax.scan``. Decode is the O(1) state recurrence. The intra-chunk contraction
+is the compute hot-spot mirrored by the Pallas ``ssd_scan`` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, dtype_of, gated_rms_norm
+
+
+def ssm_init(key, cfg, d_model=None):
+    s = cfg.ssm
+    d = d_model or cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    # dt bias initialised so softplus(dt_bias) spans [dt_min, dt_max]
+    u = np.random.RandomState(0).uniform(size=(nh,))
+    dt0 = np.exp(u * (np.log(s.dt_max) - np.log(s.dt_min)) + np.log(s.dt_min))
+    dt_bias = dt0 + np.log(-np.expm1(-dt0))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.n_groups * s.d_state + nh), dt),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_ch), dt, fan_in=s.conv_kernel),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),                  # A = -exp(0) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(ks[2], (d_in, d), dt, fan_in=d_in),
+    }
+
+
+def _split_proj(cfg, p, x):
+    s = cfg.ssm
+    d_in = s.expand * (p["out_proj"].shape[1])
+    nh = d_in // s.head_dim
+    gn = s.n_groups * s.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xbc, dt, d_in, nh, gn
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over axis 1. xbc (B,L,ch); w (K,ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _heads(cfg, xbc, dt, p, d_in, nh, gn):
+    s = cfg.ssm
+    x_, B_, C_ = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    B, L = x_.shape[:2]
+    x_ = x_.reshape(B, L, nh, s.head_dim)
+    B_ = B_.reshape(B, L, s.n_groups, s.d_state)
+    C_ = C_.reshape(B, L, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return x_, Bh, Ch, dt, A
+
+
+def ssd_chunked(x, dt, A, Bh, Ch, chunk, initial_state=None,
+                compute_dtype=jnp.float32):
+    """Chunked SSD. x (B,L,H,P); dt (B,L,H) fp32; A (H,); Bh/Ch (B,L,H,N).
+
+    ``compute_dtype`` controls the materialised (Q x Q) decay/score tensors —
+    the dominant HBM traffic (hillclimb lever; inter-chunk state stays fp32).
+    Returns (y (B,L,H,P), final_state (B,H,N,P)).
+    """
+    B, L, H, P = x.shape
+    N = Bh.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    nc = L // Q
+    r = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bh), r(Ch)
+    cdt = jnp.dtype(compute_dtype)
+
+    dA = dtc * A                                                  # (B,nc,Q,H) <=0
+    cum = jnp.cumsum(dA, axis=2)                                  # inclusive
+    # intra-chunk (the Pallas ssd_scan kernel mirrors this contraction)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (B,nc,Q,Q,H) i,j
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(seg), 0.0).astype(cdt)       # (B,nc,Q,Q,H)
+    xdt = (xc * dtc[..., None]).astype(cdt)
+    G = jnp.einsum("bcqhn,bckhn->bcqkh", Cc.astype(cdt),
+                   Bc.astype(cdt),
+                   preferred_element_type=cdt)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", G * Lmat, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk local states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,Q,H)
+    S_local = jnp.einsum("bckhn,bckhp->bchnp",
+                         (Bc * decay_end[..., None]).astype(jnp.float32),
+                         xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    def step(S, inp):
+        S_loc, dec = inp
+        S_new = S * dec[:, :, None, None] + S_loc
+        return S_new, S                                           # emit previous
+
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    S_last, S_prev = jax.lax.scan(
+        step, S0, (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                           # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         (Cc * jnp.exp(cum)[..., None]).astype(jnp.float32),
+                         S_prev)
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y.astype(x.dtype), S_last
+
+
+def ssm_apply(cfg, p, x, *, initial_state=None):
+    """Full-sequence Mamba2 block. Returns (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    z, xbc, dt, d_in, nh, gn = _split_proj(cfg, p, x)
+    conv_state = xbc[:, -(s.conv_kernel - 1):, :]                 # pre-activation
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x_, Bh, Ch, dtf, A = _heads(cfg, xbc, dt, p, d_in, nh, gn)
+    y, state = ssd_chunked(x_, dtf, A, Bh, Ch, s.chunk,
+                           initial_state=initial_state,
+                           compute_dtype=s.compute_dtype)
+    y = y + (p["D"][:, None] * x_.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*x.shape[:2], d_in)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, state)
+
+
+def ssm_decode(cfg, p, x, conv_state, ssm_state):
+    """One-token recurrence. x (B,1,d); conv_state (B,K-1,ch);
+    ssm_state (B,H,N,P) fp32. Returns (y, conv_state, ssm_state)."""
+    s = cfg.ssm
+    z, xbc, dt, d_in, nh, gn = _split_proj(cfg, p, x)
+    window = jnp.concatenate([conv_state, xbc], axis=1)           # (B,K,ch)
+    new_conv_state = window[:, 1:]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    x_, Bh, Ch, dtf, A = _heads(cfg, xbc1, dt, p, d_in, nh, gn)
+    x_, Bh, Ch, dtf = x_[:, 0], Bh[:, 0], Ch[:, 0], dtf[:, 0]     # (B,H,*)
+    decay = jnp.exp(dtf * A)                                      # (B,H)
+    xdt = (x_ * dtf[..., None]).astype(jnp.float32)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32), xdt)
+    new_state = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+    y = y + p["D"][:, None] * x_.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv_state, new_state

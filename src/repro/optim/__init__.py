@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, adamw,
+                                    make_optimizer, momentum, sgd)
+from repro.optim.schedule import cosine_warmup
+
+__all__ = ["Optimizer", "adafactor", "adam", "adamw", "make_optimizer",
+           "momentum", "sgd", "cosine_warmup"]

@@ -1,0 +1,162 @@
+"""Pure-JAX optimizers (no external deps): SGD, momentum, Adam, AdamW and
+Adafactor. Adafactor's factored second moment is what lets the 398B/671B
+configs fit v5e HBM (see DESIGN.md §5): state is O(rows + cols) per matrix
+instead of O(rows * cols).
+
+API:
+    opt = make_optimizer(train_cfg)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str = ""
+
+
+def _tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return _tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                     grads), norm
+
+
+# ---------------------------------------------------------------------- #
+def sgd(cfg: TrainConfig) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(params, grads, state, step, lr):
+        new = _tree_map(lambda p, g: (p.astype(jnp.float32)
+                                      - lr * g.astype(jnp.float32)
+                                      ).astype(p.dtype), params, grads)
+        return new, state
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(cfg: TrainConfig) -> Optimizer:
+    def init(params):
+        return {"m": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(params, grads, state, step, lr):
+        m = _tree_map(lambda m, g: cfg.beta1 * m + g.astype(jnp.float32),
+                      state["m"], grads)
+        new = _tree_map(lambda p, m: (p.astype(jnp.float32) - lr * m
+                                      ).astype(p.dtype), params, m)
+        return new, {"m": m}
+    return Optimizer(init, update, "momentum")
+
+
+def _adam_core(cfg: TrainConfig, decoupled_wd: float) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tree_map(z, params), "v": _tree_map(z, params)}
+
+    def update(params, grads, state, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = _tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["m"], grads)
+        v = _tree_map(lambda v, g: b2 * v + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mhat = _tree_map(lambda m: m / (1 - b1 ** t), m)
+        vhat = _tree_map(lambda v: v / (1 - b2 ** t), v)
+
+        def upd(p, mh, vh):
+            step_ = lr * mh / (jnp.sqrt(vh) + cfg.eps)
+            if decoupled_wd and p.ndim >= 2:     # no decay on norms/biases
+                step_ = step_ + lr * decoupled_wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        new = _tree_map(upd, params, mhat, vhat)
+        return new, {"m": m, "v": v}
+    return Optimizer(init, update, "adam" if not decoupled_wd else "adamw")
+
+
+def adam(cfg: TrainConfig) -> Optimizer:
+    return _adam_core(cfg, 0.0)
+
+
+def adamw(cfg: TrainConfig) -> Optimizer:
+    return _adam_core(cfg, cfg.weight_decay)
+
+
+# ---------------------------------------------------------------------- #
+def adafactor(cfg: TrainConfig) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern 2018), no momentum,
+    update clipping at 1.0, relative step off (we pass lr explicitly)."""
+    eps1 = 1e-30
+
+    def init(params):
+        def per(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"s": _tree_map(per, params)}
+
+    def update(params, grads, state, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8
+
+        def per(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps1
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = gf / jnp.sqrt(vhat + eps1)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = gf / jnp.sqrt(v + eps1)
+                ns = {"v": v}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        out = [per(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new = tdef.unflatten([o[0] for o in out])
+        ns = tdef.unflatten([o[1] for o in out])
+        return new, {"s": ns}
+    return Optimizer(init, update, "adafactor")
+
+
+# ---------------------------------------------------------------------- #
+_REGISTRY = {"sgd": sgd, "momentum": momentum, "adam": adam, "adamw": adamw,
+             "adafactor": adafactor}
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {cfg.optimizer}")
+    return _REGISTRY[cfg.optimizer](cfg)

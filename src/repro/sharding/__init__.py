@@ -1,0 +1,6 @@
+from repro.sharding.ctx import activation_specs, constrain
+from repro.sharding.specs import (batch_specs, data_axes, named,
+                                  opt_state_specs, param_specs)
+
+__all__ = ["activation_specs", "constrain", "batch_specs", "data_axes",
+           "named", "opt_state_specs", "param_specs"]

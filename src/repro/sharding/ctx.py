@@ -1,0 +1,42 @@
+"""Logical activation-sharding context.
+
+Models call ``constrain(x, name)`` at well-known points; outside a sharding
+context this is the identity, inside (set by the launcher/dry-run) it becomes
+``with_sharding_constraint`` with the registered ``PartitionSpec``. Keeps the
+model code mesh-agnostic while letting GSPMD propagation be pinned where it
+matters (activations, MoE dispatch buffers, decode caches).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_state = threading.local()
+
+
+def _specs() -> Dict[str, PartitionSpec]:
+    return getattr(_state, "specs", {})
+
+
+@contextlib.contextmanager
+def activation_specs(specs: Dict[str, PartitionSpec]):
+    old = _specs()
+    _state.specs = {**old, **specs}
+    try:
+        yield
+    finally:
+        _state.specs = old
+
+
+def constrain(x, name: str):
+    spec = _specs().get(name)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # outside a mesh context (e.g. plain CPU tests)

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real (single-CPU) device; only launch/dryrun.py forces 512 host devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

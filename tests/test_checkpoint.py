@@ -1,0 +1,41 @@
+"""Checkpoint roundtrip (msgpack pytrees, bf16-safe)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.checkpoint.io import latest_step, load_pytree, save_pytree
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5,
+                  "d": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    p = str(tmp_path / "x.msgpack")
+    save_pytree(t, p)
+    out = load_pytree(t, p)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_step_management(tmp_path):
+    d = str(tmp_path / "ckpt")
+    t = _tree()
+    save(d, 10, t, {"note": "first"})
+    save(d, 20, t)
+    assert latest_step(d) == 20
+    state, meta = restore(d, t)
+    assert meta["step"] == 20
+    state, meta = restore(d, t, step=10)
+    assert meta["note"] == "first"
+
+
+def test_restore_empty(tmp_path):
+    state, meta = restore(str(tmp_path / "none"), _tree())
+    assert state is None and meta is None

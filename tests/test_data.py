@@ -1,0 +1,76 @@
+"""Paper §V-A data protocol: synthetic MNIST, non-IID partition, label flip."""
+import numpy as np
+import pytest
+
+from repro.core.poisoning import EASY_PAIR, HARD_PAIR, LabelFlipAttack
+from repro.data.partition import (GROUP_SIZE, MAX_GROUPS, MIN_GROUPS,
+                                  label_histogram, partition)
+from repro.data.synthetic_mnist import generate
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate(5000, 1000, seed=0)
+
+
+def test_generate_shapes(data):
+    train, test = data
+    assert train.x.shape == (5000, 784) and test.x.shape == (1000, 784)
+    assert train.x.min() >= 0 and train.x.max() <= 1
+    assert set(np.unique(train.y)) == set(range(10))
+
+
+def test_partition_protocol(data):
+    train, _ = data
+    rng = np.random.default_rng(0)
+    clients = partition(train, 20, rng)
+    for c in clients:
+        # sizes are whole groups within [1, 30]
+        assert c.size % GROUP_SIZE == 0
+        assert MIN_GROUPS * GROUP_SIZE <= c.size <= MAX_GROUPS * GROUP_SIZE
+    # groups are same-digit -> clients are class-skewed (non-IID)
+    n_classes = [len(np.unique(c.data.y)) for c in clients]
+    assert min(n_classes) < 10
+    # groups are single-digit except at the <=9 class-boundary groups of the
+    # sorted pool (inherent to the paper's sort-then-group protocol)
+    pure = mixed = 0
+    for c in clients:
+        for g in range(c.size // GROUP_SIZE):
+            grp = c.data.y[g * GROUP_SIZE:(g + 1) * GROUP_SIZE]
+            if len(np.unique(grp)) == 1:
+                pure += 1
+            else:
+                mixed += 1
+    assert mixed <= 9
+    assert pure > 10 * mixed
+    assert sum(c.size for c in clients) <= len(train)
+
+
+def test_label_flip(data):
+    train, _ = data
+    rng = np.random.default_rng(0)
+    atk = LabelFlipAttack(*EASY_PAIR)
+    flipped = atk.apply(train.y, rng)
+    assert not np.any(flipped == EASY_PAIR[0])
+    assert np.sum(flipped == EASY_PAIR[1]) == (np.sum(train.y == EASY_PAIR[1])
+                                               + np.sum(train.y == EASY_PAIR[0]))
+    # non-source labels untouched
+    keep = train.y != EASY_PAIR[0]
+    assert np.array_equal(flipped[keep], train.y[keep])
+
+
+def test_malicious_clients_get_flipped(data):
+    train, _ = data
+    rng = np.random.default_rng(0)
+    clients = partition(train, 10, rng, malicious=np.array([3]),
+                        attack=LabelFlipAttack(*HARD_PAIR))
+    assert clients[3].malicious
+    assert not np.any(clients[3].data.y == HARD_PAIR[0])
+    honest = [c for c in clients if not c.malicious]
+    assert all(not c.malicious for c in honest)
+
+
+def test_histogram(data):
+    train, _ = data
+    h = label_histogram(train, 10)
+    assert h.sum() == len(train)

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)
+plus hypothesis property tests on the FedAvg aggregation kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,T,D,causal,window", [
+    (2, 4, 256, 256, 64, True, None),
+    (1, 2, 128, 256, 64, True, None),      # prefill-style, right-aligned
+    (2, 2, 256, 256, 128, True, 64),       # sliding window
+    (1, 1, 256, 256, 64, False, None),     # bidirectional (encoder)
+    (1, 2, 512, 512, 64, True, None),
+])
+def test_flash_attention(B, H, S, T, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, H, S, D), dtype)
+    k = _rand(ks[1], (B, H, T, D), dtype)
+    v = _rand(ks[2], (B, H, T, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,D,length", [
+    (2, 4, 512, 64, 300),
+    (1, 8, 1024, 128, 1024),
+    (4, 2, 256, 64, 1),
+])
+def test_decode_attention(B, H, T, D, length, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    k = _rand(ks[1], (B, T, H, D), dtype)
+    v = _rand(ks[2], (B, T, H, D), dtype)
+    out = ops.decode_attention(q, k, v, length)
+    expect = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("B,L,H,P,N,G,chunk", [
+    (2, 256, 4, 32, 16, 4, 64),
+    (1, 128, 2, 64, 32, 1, 128),   # grouped B/C broadcast
+    (1, 64, 8, 16, 8, 8, 16),
+])
+def test_ssd_scan(B, L, H, P, N, G, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(0.2 * jax.random.normal(ks[2], (H,)))
+    B_ = jax.random.normal(ks[3], (B, L, G, N))
+    C_ = jax.random.normal(ks[4], (B, L, G, N))
+    y = ops.ssd_scan(x, dt, A, B_, C_, chunk=chunk)
+    rep = H // G
+    yr, _ = ref.ssd_ref(x, dt, A, jnp.repeat(B_, rep, 2),
+                        jnp.repeat(C_, rep, 2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_ssd_scan_matches_model_path():
+    """Kernel == models.ssm.ssd_chunked (the XLA path it replaces)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, L, H, P, N = 2, 128, 4, 32, 16
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(0.2 * jax.random.normal(ks[2], (H,)))
+    B_ = jax.random.normal(ks[3], (B, L, H, N))
+    C_ = jax.random.normal(ks[4], (B, L, H, N))
+    y1 = ops.ssd_scan(x, dt, A, B_, C_, chunk=32)
+    y2, _ = ssd_chunked(x, dt, A, B_, C_, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,d,f", [
+    (4, 128, 256, 128),
+    (8, 64, 128, 384),
+    (2, 256, 512, 256),
+])
+def test_moe_gemm(E, C, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = _rand(ks[0], (E, C, d), dtype)
+    w = _rand(ks[1], (E, d, f), dtype)
+    out = ops.moe_gemm(x, w, block_c=64, block_f=128, block_k=128)
+    expect = ref.moe_gemm_ref(x, w)
+    tol = {jnp.float32: 1e-4, jnp.bfloat16: 2e-1}[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(1, 7), st.integers(1, 5000), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_weighted_aggregate_property(n, m, seed):
+    """FedAvg kernel: matches oracle for arbitrary (N, M); convex combination
+    stays within the per-coordinate envelope of the updates."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (n, m))
+    w = jnp.abs(jax.random.normal(ks[1], (n,))) + 1e-3
+    out = ops.weighted_aggregate(x, w)
+    expect = ref.weighted_aggregate_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+    assert np.all(np.asarray(out) <= np.asarray(x.max(0)) + 1e-5)
+    assert np.all(np.asarray(out) >= np.asarray(x.min(0)) - 1e-5)

@@ -1,0 +1,75 @@
+"""Diversity (Eq. 2), reputation (Eq. 1) and data-quality value (Eq. 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FeelConfig
+from repro.core.diversity import diversity_index, gini_simpson, normalize
+from repro.core.quality import adaptive_weights, data_quality_value
+from repro.core.reputation import ReputationTracker
+
+
+def test_gini_simpson_extremes():
+    assert gini_simpson(np.zeros(100, int), 10) == 0.0
+    uniform = np.repeat(np.arange(10), 10)
+    assert gini_simpson(uniform, 10) == pytest.approx(0.9)
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=500))
+@settings(max_examples=50, deadline=None)
+def test_gini_simpson_bounds(labels):
+    g = gini_simpson(np.array(labels), 10)
+    assert 0.0 <= g <= 0.9 + 1e-12
+
+
+@given(st.lists(st.floats(0, 1e6, allow_nan=False), min_size=2, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_normalize_bounds(vals):
+    v = normalize(np.array(vals))
+    assert np.all((v >= 0) & (v <= 1))
+
+
+def test_diversity_index_orders_richer_datasets_higher():
+    div = np.array([0.9, 0.0])
+    sizes = np.array([1500.0, 50.0])
+    ages = np.array([1.0, 1.0])
+    I = diversity_index(div, sizes, ages, (1/3, 1/3, 1/3))
+    assert I[0] > I[1]
+
+
+def test_reputation_drops_for_liar():
+    cfg = FeelConfig(n_ues=3)
+    rt = ReputationTracker(cfg)
+    # UE0 honest (local == test), UE1 overstates by 0.4, UE2 honest
+    rt.update(np.array([0, 1, 2]),
+              acc_local=np.array([0.6, 0.9, 0.6]),
+              acc_test=np.array([0.6, 0.5, 0.6]))
+    assert rt.values[1] < rt.values[0]
+    assert rt.values[0] == rt.values[2]
+
+
+def test_reputation_clipped():
+    cfg = FeelConfig(n_ues=1, eta=1.0)
+    rt = ReputationTracker(cfg)
+    for _ in range(50):
+        rt.update(np.array([0]), np.array([1.0]), np.array([0.0]))
+    assert rt.values[0] == 0.0
+
+
+def test_value_weights():
+    cfg = FeelConfig(omega_rep=1.0, omega_div=0.0)
+    v = data_quality_value(np.array([0.5]), np.array([0.9]), cfg)
+    assert v[0] == pytest.approx(0.5)
+    cfg = FeelConfig(omega_rep=0.0, omega_div=1.0)
+    v = data_quality_value(np.array([0.5]), np.array([0.9]), cfg)
+    assert v[0] == pytest.approx(0.9)
+
+
+def test_adaptive_weights_shift_toward_reputation():
+    cfg = FeelConfig()
+    early = adaptive_weights(0, 15, cfg)
+    late = adaptive_weights(14, 15, cfg)
+    assert late.omega_rep > early.omega_rep
+    assert early.omega_div > late.omega_div
+    total = cfg.omega_rep + cfg.omega_div
+    assert early.omega_rep + early.omega_div == pytest.approx(total)

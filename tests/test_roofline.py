@@ -1,0 +1,49 @@
+"""Roofline extraction unit tests: HLO collective parsing + term math."""
+import pytest
+
+from repro.launch import roofline as rl
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[1024,256]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[64,64]{1,0} all-reduce(%x), to_apply=%sum
+  %ars = (f32[32,32]{1,0}, f32[32,32]{1,0}) all-reduce-start(%a, %b)
+  %rs = bf16[16,256]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%z), dimensions={1}
+  %cp = bf16[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not_a_collective = f32[999,999]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = rl.collective_bytes(HLO)
+    assert out["all-gather"] == 1024 * 256 * 2
+    assert out["all-reduce"] == 64 * 64 * 4 + 2 * 32 * 32 * 4  # incl. -start tuple
+    assert out["reduce-scatter"] == 16 * 256 * 2
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+
+
+def test_terms_math():
+    coll = {"all-gather": ICI_BW, "all-reduce": ICI_BW,
+            "reduce-scatter": 0, "all-to-all": 0, "collective-permute": 0}
+    t = rl.roofline_terms(PEAK_FLOPS_BF16, HBM_BW, coll)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(3.0)   # AR counts 2x
+    assert rl.dominant(t) == "collective_s"
+
+
+def test_model_flops_moe_counts_active_only():
+    from repro.configs import get
+    dense = rl.model_flops(get("yi-34b"), 1000, train=True)
+    assert dense == pytest.approx(
+        6.0 * (get("yi-34b").param_count(True)
+               - get("yi-34b").vocab_size * get("yi-34b").d_model) * 1000)
+    moe_cfg = get("deepseek-v3-671b")
+    active = moe_cfg.param_count(active_only=True)
+    total = moe_cfg.param_count(active_only=False)
+    assert active < 0.15 * total     # 671B total, ~37B active

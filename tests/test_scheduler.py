@@ -1,0 +1,89 @@
+"""DQS scheduler (paper Alg. 2) invariants + exact-knapsack comparison."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FeelConfig
+from repro.core.scheduler import (best_channel_schedule, brute_force_schedule,
+                                  dqs_schedule, max_count_schedule,
+                                  random_schedule, top_value_schedule)
+
+
+def _cfg(k):
+    return FeelConfig(n_ues=k)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(5, 30))
+@settings(max_examples=30, deadline=None)
+def test_dqs_respects_budget_and_feasibility(seed, k):
+    rng = np.random.default_rng(seed)
+    values = rng.uniform(0, 2, k)
+    costs = rng.integers(1, k + 2, k)          # k+1 == infeasible
+    s = dqs_schedule(values, costs, _cfg(k))
+    # (8c/8d): total bandwidth budget
+    assert s.alpha.sum() <= 1.0 + 1e-9
+    assert np.all((s.alpha >= 0) & (s.alpha <= 1))
+    # selected UEs get exactly their cost in fractions; unselected get none
+    np.testing.assert_allclose(s.alpha[s.x], costs[s.x] / k)
+    assert np.all(s.alpha[~s.x] == 0)
+    # infeasible UEs are never selected (deadline, 8b)
+    assert not np.any(s.x[costs > k])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_dqs_vs_bruteforce_small(seed):
+    """Greedy is feasible and close to the exact knapsack optimum."""
+    k = 8
+    rng = np.random.default_rng(seed)
+    values = rng.uniform(0.1, 1.0, k)
+    costs = rng.integers(1, k + 1, k)
+    g = dqs_schedule(values, costs, _cfg(k))
+    b = brute_force_schedule(values, costs, _cfg(k))
+    assert g.objective() <= b.objective() + 1e-9
+    assert g.objective() >= 0.5 * b.objective() - 1e-9
+
+
+def test_dqs_prefers_value_density():
+    """The greedy order is V/c: a cheap high-value UE beats an expensive
+    slightly-higher-value one when the budget only fits one."""
+    k = 2
+    values = np.array([1.0, 1.1])
+    costs = np.array([1, 2])
+    cfg = FeelConfig(n_ues=2)
+    s = dqs_schedule(values, costs, cfg)
+    assert s.x[0] and not s.x[1]      # budget 2: picks c=1 first, 1 left < 2
+
+
+def test_all_policies_feasible():
+    k = 20
+    rng = np.random.default_rng(0)
+    values = rng.uniform(0, 1, k)
+    costs = rng.integers(1, 8, k)
+    gains = rng.uniform(1e-12, 1e-8, k)
+    cfg = _cfg(k)
+    for s in [dqs_schedule(values, costs, cfg),
+              random_schedule(values, costs, cfg, rng),
+              best_channel_schedule(values, costs, cfg, gains),
+              max_count_schedule(values, costs, cfg)]:
+        assert s.alpha.sum() <= 1 + 1e-9
+        assert not np.any(s.x[costs > k])
+
+
+def test_max_count_maximises_count():
+    k = 10
+    rng = np.random.default_rng(1)
+    values = rng.uniform(0, 1, k)
+    costs = rng.integers(1, 5, k)
+    cfg = _cfg(k)
+    mc = max_count_schedule(values, costs, cfg)
+    dq = dqs_schedule(values, costs, cfg)
+    assert mc.x.sum() >= dq.x.sum()
+
+
+def test_top_value_selects_n():
+    cfg = FeelConfig(n_ues=50, min_selected=5)
+    values = np.random.default_rng(2).uniform(0, 1, 50)
+    s = top_value_schedule(values, cfg, 5)
+    assert s.x.sum() == 5
+    assert set(s.selected) == set(np.argsort(-values)[:5])

@@ -1,0 +1,58 @@
+"""Extra serving-path coverage: cache growth, enc-dec cross caches, batched
+generation smoke via the serve launcher components."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced, registry
+from repro.models import api, transformer as tf
+
+
+def test_grow_cache_pads_only_kv_axes():
+    cfg = dataclasses.replace(reduced(get("yi-34b")), dtype="float32")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab_size)
+    _, cache = tf.lm_prefill(cfg, params, tok, target_len=32)
+    k = cache["blocks"]["layers"][0]["k"]
+    assert k.shape[2] == 32                  # (n_blocks, B, C, hkv, hd)
+    assert int(cache["index"]) == 8
+
+
+def test_encdec_cross_cache_shapes():
+    cfg = dataclasses.replace(reduced(get("seamless-m4t-medium")),
+                              dtype="float32")
+    cache = api.cache_init(cfg, batch=2, seq_len=16)
+    layer0 = cache["blocks"]["layers"][0]
+    assert "xk" in layer0 and "xv" in layer0
+    assert layer0["xk"].shape[2] == min(16, 4096)   # cross length
+
+
+def test_greedy_generation_deterministic():
+    cfg = dataclasses.replace(reduced(get("qwen2.5-32b")), dtype="float32")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                 cfg.vocab_size)
+
+    def generate():
+        logits, cache = api.prefill(cfg, params, {"tokens": prompts},
+                                    target_len=16)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        outs = [tok]
+        for _ in range(7):
+            logits, cache = api.decode_step(cfg, params, cache, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            outs.append(tok)
+        return jnp.concatenate(outs, 1)
+
+    a, b = generate(), generate()
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_optimized_config_helper():
+    cfg = registry.optimized(get("deepseek-v3-671b"), 16)
+    assert cfg.moe.dispatch_groups == 16
+    dense = registry.optimized(get("yi-34b"), 16)
+    assert dense.moe is None

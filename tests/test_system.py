@@ -1,0 +1,57 @@
+"""End-to-end FEEL system behaviour (paper Alg. 1 + Alg. 2 + Eq. 1-3):
+reduced-scale runs of the full federated pipeline."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FeelConfig
+from repro.core.poisoning import EASY_PAIR
+from repro.federated.simulation import run_experiment
+
+# reduced-scale protocol: fewer samples/rounds so the suite stays fast
+KW = dict(n_train=4000, n_test=800, rounds=4)
+
+
+@pytest.fixture(scope="module")
+def dqs_run():
+    return run_experiment("dqs", EASY_PAIR, seed=0, **KW)
+
+
+def test_training_improves_accuracy(dqs_run):
+    acc = dqs_run["acc"]
+    assert acc[-1] > acc[0]
+    assert acc[-1] > 0.25          # far above the 0.1 random baseline
+
+
+def test_curves_complete(dqs_run):
+    assert len(dqs_run["acc"]) == KW["rounds"]
+    assert len(dqs_run["malicious_selected"]) == KW["rounds"]
+
+
+def test_reputation_tracks_malice(dqs_run):
+    """Across the run, honest UEs end with reputation >= malicious UEs."""
+    assert dqs_run["final_reputation_honest"] >= \
+        dqs_run["final_reputation_malicious"] - 0.05
+
+
+def test_policies_run_and_return_curves():
+    for policy in ["random", "best_channel", "max_count", "top_value"]:
+        r = run_experiment(policy, EASY_PAIR, seed=1, **KW)
+        assert len(r["acc"]) == KW["rounds"]
+        assert all(0.0 <= a <= 1.0 for a in r["acc"])
+
+
+def test_constrained_bandwidth_limits_participation():
+    """With a 5 MB update the knapsack binds: the scheduled value per round
+    cannot exceed the paper's 100 KB regime."""
+    small = FeelConfig(model_size_bits=100e3 * 8)
+    big = FeelConfig(model_size_bits=5e6 * 8)
+    r_small = run_experiment("dqs", EASY_PAIR, cfg=small, seed=2, **KW)
+    r_big = run_experiment("dqs", EASY_PAIR, cfg=big, seed=2, **KW)
+    assert np.mean(r_big["objective"]) <= np.mean(r_small["objective"]) + 1e-9
+
+
+def test_adaptive_omega_runs():
+    r = run_experiment("dqs", EASY_PAIR, seed=3, adaptive_omega=True, **KW)
+    assert len(r["acc"]) == KW["rounds"]

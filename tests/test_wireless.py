@@ -1,0 +1,69 @@
+"""Wireless model (paper Eq. 4-7, 9) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FeelConfig
+from repro.core.wireless import WirelessModel, dbm_to_watt
+
+
+def _wm(seed=0, **kw):
+    cfg = FeelConfig(**kw)
+    return WirelessModel(cfg, np.random.default_rng(seed)), cfg
+
+
+def test_dbm():
+    assert dbm_to_watt(0) == pytest.approx(1e-3)
+    assert dbm_to_watt(30) == pytest.approx(1.0)
+
+
+def test_rate_monotone_in_bandwidth():
+    """Eq. 4: r(alpha) is increasing in alpha (log concavity)."""
+    wm, _ = _wm()
+    g = np.array([1e-9])
+    alphas = np.linspace(0.01, 1.0, 50)
+    r = wm.rate(g, alphas[None, :] * np.ones((1, 50)))[0]
+    r = wm.rate(np.full(50, 1e-9), alphas)
+    assert np.all(np.diff(r) > 0)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_cost_is_minimal(seed):
+    """Eq. 9: c_k is the MINIMUM feasible fraction count."""
+    wm, cfg = _wm(seed)
+    ch = wm.draw_channels()
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 31, cfg.n_ues) * 50.0
+    cpu = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
+    tt = wm.train_time(sizes, cpu)
+    costs = wm.cost(ch.gains, tt)
+    r_min = wm.min_rate(tt)
+    K = cfg.n_ues
+    for k in range(K):
+        c = costs[k]
+        if c <= K:
+            assert wm.rate(ch.gains[k:k+1], np.array([c / K]))[0] >= r_min[k]
+            if c > 1:
+                assert wm.rate(ch.gains[k:k+1],
+                               np.array([(c - 1) / K]))[0] < r_min[k]
+        else:
+            assert wm.rate(ch.gains[k:k+1], np.array([1.0]))[0] < r_min[k]
+
+
+def test_train_time_scales_with_data_and_epochs():
+    wm, cfg = _wm()
+    t1 = wm.train_time(np.array([100.0]), np.array([1e8]))
+    t2 = wm.train_time(np.array([200.0]), np.array([1e8]))
+    assert t2 == pytest.approx(2 * t1)
+    wm2, _ = _wm(local_epochs=cfg.local_epochs * 2)
+    assert wm2.train_time(np.array([100.0]), np.array([1e8])) \
+        == pytest.approx(2 * t1)
+
+
+def test_deadline_violation_infeasible():
+    """A UE whose training alone blows T can never upload (cost K+1)."""
+    wm, cfg = _wm()
+    tt = np.full(cfg.n_ues, cfg.deadline_s + 1.0)
+    costs = wm.cost(wm.draw_channels().gains, tt)
+    assert np.all(costs == cfg.n_ues + 1)
