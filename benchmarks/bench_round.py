@@ -1,0 +1,119 @@
+"""Wall-clock per FEEL round: sequential per-client loop vs the vectorized
+cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
+
+    PYTHONPATH=src python -m benchmarks.bench_round                # K=50,200,500
+    PYTHONPATH=src python -m benchmarks.bench_round --ks 50 --rounds 5
+
+Methodology — each (engine, K) measurement runs the §V unit of work in a
+FRESH subprocess (cold jit cache): ``--seeds`` independent experiments
+(fresh partition each — the paper averages over independent runs) of
+``--rounds`` rounds. This charges each engine what the protocol actually
+charges it. The loop engine re-traces per *shape*: one ``mlp_sgd_epoch``
+per distinct client dataset size and one eager evaluation program per
+distinct per-UE test-subset size — and almost every shape is new again in
+every fresh partition. The cohort engine compiles a handful of bucketed
+(N, max_samples) programs that are shape-stable across seeds. The
+per-round median (compiles mostly excluded) is reported alongside.
+
+CSV rows:
+
+    engine,K,n_train,s_per_round,median_round_s,speedup,median_speedup
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.configs.base import FeelConfig
+from repro.core.poisoning import EASY_PAIR, LabelFlipAttack, pick_malicious
+from repro.data.partition import partition
+from repro.data.synthetic_mnist import generate
+from repro.federated.server import FeelServer
+
+engine, k, n_train, n_test, rounds, seeds = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]), int(sys.argv[6]))
+cfg = FeelConfig(n_ues=k, n_malicious=max(k // 10, 1))
+times = []
+for seed in range(seeds):
+    train, test = generate(n_train, n_test, seed=seed)
+    rng = np.random.default_rng(seed)
+    malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+    clients = partition(train, cfg.n_ues, rng, malicious,
+                        LabelFlipAttack(*EASY_PAIR))
+    server = FeelServer(cfg, clients, test, rng, policy="dqs", engine=engine)
+    for t in range(rounds):
+        t0 = time.perf_counter()
+        server.run_round(t)
+        times.append(time.perf_counter() - t0)
+print(json.dumps(times))
+"""
+
+
+def _measure(engine, k, n_train, n_test, rounds, seeds):
+    r = subprocess.run(
+        [sys.executable, "-c", _WORKER,
+         engine, str(k), str(n_train), str(n_test), str(rounds), str(seeds)],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                             "")},
+        timeout=3600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    times = json.loads(r.stdout.strip().splitlines()[-1])
+    mean = sum(times) / len(times)
+    median = sorted(times)[(len(times) - 1) // 2]   # lower-biased: keeps
+    return mean, median, times                      # compile rounds out
+
+
+def _auto_n_train(k: int) -> int:
+    # keep the partition pool >= the clients' demand so datasets stay
+    # size-diverse (K=50 matches the paper's regime scaled to bench time);
+    # cap at the paper's 50k corpus
+    return min(50_000, max(10_000, 100 * k))
+
+
+def bench_k(k, n_train, n_test, rounds, seeds):
+    nt = n_train or _auto_n_train(k)
+    out = {}
+    for engine in ("loop", "vectorized"):
+        out[engine] = _measure(engine, k, nt, n_test, rounds, seeds)
+        print(f"# {engine} K={k} per-round s: "
+              f"{[round(x, 2) for x in out[engine][2]]}", file=sys.stderr)
+    cl, sl = out["loop"][:2]
+    for engine in ("loop", "vectorized"):
+        c, s, _ = out[engine]
+        print(f"{engine},{k},{nt},{c:.3f},{s:.3f},{cl / c:.2f},{sl / s:.2f}",
+              flush=True)
+    return cl / out["vectorized"][0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ks", type=int, nargs="+", default=[50, 200, 500])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="independent fresh-partition runs per measurement")
+    ap.add_argument("--n-train", type=int, default=None,
+                    help="override the per-K automatic corpus size")
+    ap.add_argument("--n-test", type=int, default=1_000)
+    args = ap.parse_args()
+
+    print("engine,K,n_train,s_per_round,median_round_s,"
+          "speedup,median_speedup")
+    for k in args.ks:
+        speedup = bench_k(k, args.n_train, args.n_test, args.rounds,
+                          args.seeds)
+        print(f"# K={k}: vectorized per-round speedup {speedup:.2f}x",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

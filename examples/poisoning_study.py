@@ -49,6 +49,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced scale (12k samples, 8 rounds, 2 seeds)")
+    ap.add_argument("--engine", choices=["vectorized", "loop"],
+                    default="vectorized",
+                    help="cohort execution engine (the vectorized engine "
+                         "makes this multi-seed sweep feasible; 'loop' is "
+                         "the sequential oracle)")
     args = ap.parse_args()
     if args.fast:
         kw = dict(n_train=12_000, n_test=2_000, rounds=8)
@@ -56,6 +61,7 @@ def main():
     else:
         kw = dict(n_train=50_000, n_test=10_000, rounds=15)  # paper protocol
         seeds = (0, 1, 2)
+    kw["engine"] = args.engine
 
     results = {}
     t0 = time.time()

@@ -30,7 +30,10 @@ def main():
     print(f"{cfg.n_ues} UEs, malicious: {sorted(malicious.tolist())}, "
           f"attack {EASY_PAIR[0]}->{EASY_PAIR[1]}")
 
-    server = FeelServer(cfg, clients, test, rng, policy="dqs")
+    # the vectorized cohort engine trains every scheduled UE in one vmapped
+    # step (pass engine="loop" for the sequential per-client oracle)
+    server = FeelServer(cfg, clients, test, rng, policy="dqs",
+                        engine="vectorized")
     for t in range(cfg.rounds):
         log = server.run_round(t)
         print(f"round {t}: acc={log.global_acc:.3f} "

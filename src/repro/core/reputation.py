@@ -8,6 +8,22 @@ trails the cohort) or when it over-reports its local accuracy versus the
 server-side test-set evaluation — catching both malicious and overfitting /
 dishonest UEs. Reputations start at 1 (Alg. 1 line 4) and are clipped to
 [0, 1] so a long honest history cannot mask a late attack indefinitely.
+
+Sign audit of the beta1 term (both deltas are *subtracted*, per Eq. 1):
+``beta1 * (acc_local - avg(acc))`` does lower the reputation of any UE
+whose *self-reported* accuracy sits above the cohort mean — including an
+honest UE with genuinely good data. That is the paper's equation as
+written, not a transcription error: Eq. 1 treats the report itself as the
+suspect quantity, and a relative over-report is evidence of dishonesty
+because the attacks the paper studies inflate exactly this number (a
+label-flip UE fits its flipped labels locally and reports high accuracy; a
+lying UE adds ``lie_boost``). For honest UEs the term is benign: their
+report tracks the server-side measurement, so the dominant beta2 gap
+(beta2 = 0.8 >> beta1 = 0.2 here) stays near zero and the small beta1
+fluctuations centre on zero as the cohort mean moves with them. A poisoner
+pays both terms every round it is scheduled. The property the scheduler
+actually needs — honest UEs end above poisoners — is pinned by
+tests/test_cohort.py::test_reputation_orders_honest_above_poisoner.
 """
 from __future__ import annotations
 

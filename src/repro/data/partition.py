@@ -61,3 +61,55 @@ def partition(train: Dataset, n_ues: int, rng: np.random.Generator,
 
 def label_histogram(ds: Dataset, n_classes: int = 10) -> np.ndarray:
     return np.bincount(ds.y.astype(int), minlength=n_classes)
+
+
+@dataclasses.dataclass
+class PaddedClients:
+    """Uniform-shape client layout for the vectorized cohort engine.
+
+    Every client dataset is zero-padded on the sample axis to one shared
+    ``max_samples`` length with a {0,1} float validity mask; real samples
+    occupy the prefix. Padding rows are all-zero features with label 0 and
+    mask 0 — the masked SGD in ``models/mlp.py`` guarantees they contribute
+    exactly zero gradient, so training on the padded layout reproduces the
+    per-client unpadded run. A round's cohort is stacked by plain row
+    indexing: ``padded.x[sel]`` is the (N, max_samples, D) batch.
+    """
+    x: np.ndarray       # (K, max_samples, D) float32
+    y: np.ndarray       # (K, max_samples) int32
+    mask: np.ndarray    # (K, max_samples) float32, 1 = real sample
+    sizes: np.ndarray   # (K,) true sample counts
+
+    @property
+    def max_samples(self) -> int:
+        return self.x.shape[1]
+
+
+def pad_clients(clients: List[ClientData], multiple_of: int = 1,
+                pad_to: Optional[int] = None) -> PaddedClients:
+    """Pad every client to the cohort-uniform shape (see PaddedClients).
+
+    multiple_of — round ``max_samples`` up so the masked SGD's batch grid
+    divides it exactly (callers pass their batch size).
+    pad_to — pad to this protocol-level constant instead of the data
+    maximum (e.g. ``MAX_GROUPS * GROUP_SIZE``): keeps the cohort shape
+    identical across seeds/partitions so the jitted cohort step compiles
+    once for a whole multi-seed sweep. Must cover the largest client.
+    """
+    sizes = np.array([c.size for c in clients], np.int64)
+    s_max = int(sizes.max())
+    if pad_to is not None:
+        assert pad_to >= s_max, (pad_to, s_max)
+        s_max = pad_to
+    s_max = ((s_max + multiple_of - 1) // multiple_of) * multiple_of
+    n_feat = clients[0].data.x.shape[1]
+    k = len(clients)
+    x = np.zeros((k, s_max, n_feat), np.float32)
+    y = np.zeros((k, s_max), np.int32)
+    mask = np.zeros((k, s_max), np.float32)
+    for i, c in enumerate(clients):
+        n = c.size
+        x[i, :n] = c.data.x
+        y[i, :n] = c.data.y
+        mask[i, :n] = 1.0
+    return PaddedClients(x=x, y=y, mask=mask, sizes=sizes)

@@ -1,7 +1,10 @@
-from repro.federated.aggregation import fedavg, fedavg_stacked
+from repro.federated.aggregation import (fedavg, fedavg_stacked,
+                                         normalize_weights)
 from repro.federated.client import ClientReport, local_train
+from repro.federated.cohort import cohort_eval, cohort_train
 from repro.federated.server import FeelServer, RoundLog
 from repro.federated.simulation import averaged, run_experiment
 
-__all__ = ["fedavg", "fedavg_stacked", "ClientReport", "local_train",
-           "FeelServer", "RoundLog", "averaged", "run_experiment"]
+__all__ = ["fedavg", "fedavg_stacked", "normalize_weights", "ClientReport",
+           "local_train", "cohort_eval", "cohort_train", "FeelServer",
+           "RoundLog", "averaged", "run_experiment"]

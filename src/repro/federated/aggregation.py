@@ -1,36 +1,82 @@
-"""FedAvg aggregation (Alg. 1 line 13): g <- sum_k (D_k / D_t) * Omega_k."""
+"""FedAvg aggregation (Alg. 1 line 13): g <- sum_k (D_k / D_t) * Omega_k.
+
+The list form (``fedavg``) and the stacked cohort form (``fedavg_stacked``)
+share one normalisation and one combine path, so they agree bit-for-bit
+(tests/test_fedavg.py pins this): weights are normalised in float64 on the
+host when concrete (float32 under trace) and the weighted sum always
+accumulates in float32.
+
+``fedavg_stacked`` is the cohort engine's aggregation route. With
+``kernel=True`` (or ``REPRO_USE_PALLAS=1``) the stacked pytree is flattened
+into a single (N, M) matrix and reduced by the Pallas ``weighted_aggregate``
+kernel — interpret mode off-TPU, Mosaic on TPU; otherwise an equivalent XLA
+reduction runs leaf-wise.
+"""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def fedavg(updates: Sequence, weights: Sequence[float]):
-    """Weighted average of parameter pytrees. Weights are normalised."""
+def normalize_weights(weights) -> jnp.ndarray:
+    """(N,) weights -> (N,) float32 fractions summing to 1.
+
+    Concrete inputs normalise in float64 on the host (stable against
+    accumulation order, then one rounding to float32); traced inputs fall
+    back to float32 jnp ops — the only option under jit with x64 disabled.
+    """
+    if isinstance(weights, jax.core.Tracer):
+        w = jnp.asarray(weights, jnp.float32)
+        return w / jnp.maximum(w.sum(), 1e-9)
     w = np.asarray(weights, np.float64)
-    assert w.sum() > 0, "empty aggregation"
-    w = (w / w.sum()).astype(np.float32)
-
-    def combine(*leaves):
-        out = jnp.zeros_like(leaves[0], jnp.float32)
-        for wi, leaf in zip(w, leaves):
-            out = out + wi * leaf.astype(jnp.float32)
-        return out.astype(leaves[0].dtype)
-
-    return jax.tree.map(combine, *updates)
+    s = w.sum()
+    assert s > 0, "empty aggregation"
+    return jnp.asarray((w / s).astype(np.float32))
 
 
-def fedavg_stacked(stacked, weights):
-    """Aggregate updates stacked on axis 0 (device-cohort layout):
-    leaf (N, ...) x weights (N,) -> (...). Mirrors the Pallas
-    ``weighted_aggregate`` kernel; used by the distributed cohort step."""
-    w = weights / jnp.maximum(weights.sum(), 1e-9)
-
+@jax.jit
+def _combine_tree(stacked, w):
+    """Leaf-wise (N, ...) x normalised (N,) -> (...), float32 accumulation.
+    Jitted once per (structure, N): the round loop calls this every round."""
     def combine(leaf):
-        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
-
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wf,
+                       axis=0).astype(leaf.dtype)
     return jax.tree.map(combine, stacked)
+
+
+def fedavg(updates: Sequence, weights: Sequence[float]):
+    """Weighted average of parameter pytrees (list form). Stacks the updates
+    and delegates to ``fedavg_stacked`` — one code path for both forms."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+    return fedavg_stacked(stacked, weights)
+
+
+def fedavg_stacked(stacked, weights, kernel: Optional[bool] = None):
+    """Aggregate updates stacked on axis 0 (device-cohort layout):
+    leaf (N, ...) x weights (N,) -> (...).
+
+    kernel — True routes through the Pallas ``weighted_aggregate`` kernel on
+    the flattened parameter vector; None defers to ``ops.use_pallas()``.
+    """
+    w = normalize_weights(weights)
+    if kernel is None:
+        from repro.kernels import ops
+        kernel = ops.use_pallas()
+    if kernel:
+        from repro.kernels import ops
+        leaves, treedef = jax.tree.flatten(stacked)
+        n = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+        agg = ops.weighted_aggregate(flat, w, assume_normalized=True)
+        out, off = [], 0
+        for l in leaves:
+            m = int(np.prod(l.shape[1:], dtype=np.int64))
+            out.append(agg[off:off + m].reshape(l.shape[1:]).astype(l.dtype))
+            off += m
+        return jax.tree.unflatten(treedef, out)
+    return _combine_tree(stacked, w)

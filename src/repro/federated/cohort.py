@@ -1,0 +1,74 @@
+"""Vectorized cohort execution engine (Alg. 1, all scheduled UEs at once).
+
+The paper trains every scheduled UE independently per round; the seed
+implemented that as a sequential Python loop (`FeelServer.run_round` ->
+`local_train`) that re-traced `mlp_sgd_epoch` for every distinct client
+dataset size. Here the round's cohort is stacked into (N, max_samples, ...)
+arrays (see ``data.partition.pad_clients`` for the padding/masking
+contract) and all N local trainings run in ONE jitted, vmapped program:
+
+    cohort_train — vmap of (masked epochs + masked local accuracy) over the
+        leading client axis; global params are broadcast in, per-client
+        trained params come back stacked on axis 0, ready for
+        ``fedavg_stacked`` / the Pallas ``weighted_aggregate`` kernel.
+    cohort_eval  — one vmapped pass scoring every uploaded model on the
+        (per-UE masked) public test set, replacing the server's per-model
+        evaluation loop (Alg. 1 line 14).
+
+Shapes are cohort-size dependent, so each distinct (N, max_samples) pair
+compiles once and is cached for all later rounds; padding max_samples to a
+round-stable value (pad_clients pads to the global client maximum) keeps
+the number of distinct shapes equal to the number of distinct cohort sizes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import (mlp_accuracy_masked, mlp_apply,
+                              mlp_sgd_epoch_masked)
+
+
+@partial(jax.jit, static_argnames=("epochs", "batch_size"))
+def cohort_train(params, x, y, mask, lr, epochs: int, batch_size: int = 50):
+    """Train the whole cohort in one vmapped step.
+
+    params — global model (broadcast to every client);
+    x (N, S, D), y (N, S), mask (N, S) — the padded, stacked cohort.
+    Returns (stacked_params with leaves (N, ...), acc_local (N,)) where
+    acc_local is each client's self-reported accuracy on its own (valid)
+    samples after local training (Alg. 1 line 11).
+    """
+    def one(xi, yi, mi):
+        # fori_loop (not Python unrolling) keeps the traced epoch body
+        # single-copy — compile time is the cohort engine's main fixed cost
+        p = jax.lax.fori_loop(
+            0, epochs,
+            lambda _, q: mlp_sgd_epoch_masked(q, xi, yi, mi, lr, batch_size),
+            params)
+        return p, mlp_accuracy_masked(p, xi, yi, mi)
+
+    return jax.vmap(one)(x, y, mask)
+
+
+@jax.jit
+def cohort_eval(stacked_params, x, y, masks):
+    """Score every uploaded model on the public test set in one vmap.
+
+    stacked_params — leaves (N, ...); x (T, D), y (T,) — the full test set;
+    masks (N, T) — per-UE evaluation masks (the server restricts Eq. 1's
+    acc_test to the classes a UE claims to hold). Returns (N,) accuracies,
+    0.0 where a mask is empty.
+    """
+    def one(p, m):
+        correct = (jnp.argmax(mlp_apply(p, x), -1) == y).astype(jnp.float32)
+        return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+    return jax.vmap(one)(stacked_params, masks)
+
+
+def unstack(stacked_params, i: int):
+    """Extract client ``i``'s parameter pytree from the stacked cohort."""
+    return jax.tree.map(lambda l: l[i], stacked_params)

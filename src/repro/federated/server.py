@@ -5,11 +5,22 @@ The server sees only what the paper allows it to see: dataset *metadata*
 (size, label histogram for the diversity index, staleness), self-reported
 local accuracies, uploaded models evaluated on the public test set, and
 channel state. It never touches raw client data.
+
+Two execution engines implement Alg. 1 lines 9-14:
+
+    "vectorized" (default) — the cohort engine (federated/cohort.py): the
+        round's scheduled UEs are stacked into (N, max_samples, ...) arrays
+        and trained in one jitted vmapped step; the per-model test
+        evaluations run as a single vmap and aggregation goes through the
+        stacked ``fedavg_stacked`` path.
+    "loop" — the original sequential per-client loop, kept as the
+        correctness oracle (tests/test_cohort.py pins the engines to the
+        same accuracy curve).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -20,9 +31,10 @@ from repro.core import (ReputationTracker, WirelessModel, data_quality_value,
                         top_value_schedule)
 from repro.core.scheduler import (Schedule, best_channel_schedule,
                                   max_count_schedule, random_schedule)
-from repro.data.partition import ClientData, label_histogram
+from repro.data.partition import ClientData, label_histogram, pad_clients
 from repro.data.synthetic_mnist import Dataset, N_CLASSES
-from repro.federated.aggregation import fedavg
+from repro.federated import cohort
+from repro.federated.aggregation import fedavg, fedavg_stacked
 from repro.federated.client import local_train
 from repro.models.mlp import mlp_accuracy, mlp_init
 
@@ -42,13 +54,21 @@ class RoundLog:
 class FeelServer:
     """policy: 'dqs' | 'random' | 'best_channel' | 'max_count' | 'top_value'.
     'top_value' reproduces §V-B.1 (pure data-quality selection, no wireless).
+
+    engine: 'vectorized' | 'loop' (see module docstring).
     """
+
+    _N_BUCKET = 8   # cohort sizes are padded to a multiple of this with
+                    # zero-weight null clients (shape-stable compiles)
 
     def __init__(self, cfg: FeelConfig, clients: List[ClientData],
                  test: Dataset, rng: np.random.Generator,
                  policy: str = "dqs", lr: float = 0.1,
                  adaptive_omega: bool = False, lie_boost: float = 0.0,
-                 watch_class: Optional[int] = None, model_poison=None):
+                 watch_class: Optional[int] = None, model_poison=None,
+                 engine: str = "vectorized", batch_size: int = 50,
+                 pad_to: Optional[int] = None):
+        assert engine in ("vectorized", "loop"), engine
         self.cfg = cfg
         self.clients = clients
         self.test = test
@@ -59,6 +79,9 @@ class FeelServer:
         self.lie_boost = lie_boost
         self.watch_class = watch_class     # the attack's source class
         self.model_poison = model_poison
+        self.engine = engine
+        self.batch_size = batch_size
+        self.pad_to = pad_to        # stable cohort shape across seeds
 
         self.wireless = WirelessModel(cfg, rng)
         self.reputation = ReputationTracker(cfg)
@@ -77,6 +100,14 @@ class FeelServer:
         # exactly as hard as poisoners, which contradicts the paper's Fig. 2.
         self._test_masks = [np.isin(test.y, np.flatnonzero(h > 0))
                             for h in self.histograms]
+        self._test_mask_arr = np.stack(self._test_masks).astype(np.float32)
+        self._tx = jax.numpy.asarray(test.x)
+        self._ty = jax.numpy.asarray(test.y)
+        # vectorized-engine state, built on first use: device-resident
+        # padded client arrays / per-UE eval masks and the true sizes
+        self._pd_dev = None
+        self._mask_dev = None
+        self._pd_sizes: Optional[np.ndarray] = None
         self.logs: List[RoundLog] = []
 
     # ------------------------------------------------------------------ #
@@ -106,23 +137,20 @@ class FeelServer:
         raise KeyError(self.policy)
 
     # ------------------------------------------------------------------ #
-    def run_round(self, t: int) -> RoundLog:
+    # Per-cohort execution engines: both return the stacked/list client
+    # results as (acc_local, acc_test, aggregate-and-assign side effect).
+    # ------------------------------------------------------------------ #
+    def _run_cohort_loop(self, sel: np.ndarray) -> Tuple[np.ndarray,
+                                                         np.ndarray]:
         cfg = self.cfg
-        values = self._values(t)
-        sched = self._schedule(values)
-        sel = sched.selected
-        if sel.size == 0:       # degenerate channel draw — skip the round
-            sel = np.array([int(np.argmax(values))])
-
         reports = [local_train(self.clients[k], self.params,
                                cfg.local_epochs, self.lr,
+                               batch_size=self.batch_size,
                                lie_boost=self.lie_boost,
                                model_poison=self.model_poison) for k in sel]
 
         # server-side evaluation of every uploaded model (Alg. 1 line 14) on
         # the classes each UE claims to hold (see __init__ note)
-        tx = jax.numpy.asarray(self.test.x)
-        ty = jax.numpy.asarray(self.test.y)
         acc_test = np.empty(len(reports))
         for i, (r, k) in enumerate(zip(reports, sel)):
             m = self._test_masks[k]
@@ -130,12 +158,99 @@ class FeelServer:
                 r.params, jax.numpy.asarray(self.test.x[m]),
                 jax.numpy.asarray(self.test.y[m]))) if m.any() else 0.0
         acc_local = np.array([r.acc_local for r in reports])
-        self.reputation.update(sel, acc_local, acc_test)
 
-        # aggregate
         self.params = fedavg([r.params for r in reports],
                              [r.n_samples for r in reports])
-        g_acc = float(mlp_accuracy(self.params, tx, ty))
+        return acc_local, acc_test
+
+    def _run_cohort_vectorized(self, sel: np.ndarray) -> Tuple[np.ndarray,
+                                                               np.ndarray]:
+        cfg = self.cfg
+        if self._pd_dev is None:
+            pd = pad_clients(self.clients, multiple_of=self.batch_size,
+                             pad_to=self.pad_to)
+            # loop-engine parity contract: the loop's mlp_sgd_epoch DROPS a
+            # tail batch (nb = n // batch_size) while the masked engine
+            # would train it, so a non-dividing batch_size must fail loudly
+            assert not np.any(pd.sizes % self.batch_size), (
+                "vectorized engine requires batch_size to divide every "
+                "client dataset size (the loop oracle drops tail batches)")
+            # resident on device once (with one extra all-zero "null client"
+            # row at index K); per-round cohort stacking is then a
+            # device-side gather instead of a host copy + transfer. Only
+            # the device copy is kept — the host copy would double the
+            # padded dataset's footprint for the server's lifetime.
+            zrow = lambda a: np.concatenate([a, np.zeros_like(a[:1])])
+            self._pd_dev = tuple(jax.numpy.asarray(zrow(a))
+                                 for a in (pd.x, pd.y, pd.mask))
+            self._mask_dev = jax.numpy.asarray(zrow(self._test_mask_arr))
+            self._pd_sizes = pd.sizes
+        n = sel.size
+        # bucket the cohort size to a multiple of 8 by padding with the
+        # null client (mask all-zero -> training no-op, weight 0 below), so
+        # rounds with new cohort sizes reuse the compiled step instead of
+        # re-tracing — the exact pathology this engine replaces
+        n_pad = -(-n // self._N_BUCKET) * self._N_BUCKET
+        idx_np = np.concatenate(
+            [sel, np.full(n_pad - n, len(self.clients), sel.dtype)])
+        idx = jax.numpy.asarray(idx_np)
+        xs = jax.numpy.take(self._pd_dev[0], idx, axis=0)
+        ys = jax.numpy.take(self._pd_dev[1], idx, axis=0)
+        ms = jax.numpy.take(self._pd_dev[2], idx, axis=0)
+        stacked, acc = cohort.cohort_train(self.params, xs, ys, ms, self.lr,
+                                           cfg.local_epochs, self.batch_size)
+        acc_local = np.asarray(acc, float)[:n]
+
+        mal = np.array([self.clients[k].malicious for k in sel])
+        if self.model_poison is not None and mal.any():
+            # same contract as the loop path: model_poison.apply() per
+            # malicious client (cold path — robustness studies only)
+            for i in np.flatnonzero(mal):
+                poisoned = self.model_poison.apply(
+                    self.params, cohort.unstack(stacked, int(i)))
+                stacked = jax.tree.map(
+                    lambda l, p, i=int(i): l.at[i].set(p), stacked, poisoned)
+        if self.lie_boost:
+            acc_local = np.where(
+                mal, np.minimum(acc_local + self.lie_boost, 1.0), acc_local)
+
+        masks = jax.numpy.take(self._mask_dev, idx, axis=0)
+        acc_test = np.asarray(
+            cohort.cohort_eval(stacked, self._tx, self._ty, masks),
+            float)[:n]
+
+        weights = np.zeros(n_pad)
+        weights[:n] = self._pd_sizes[sel]
+        self.params = fedavg_stacked(stacked, weights)
+        return acc_local, acc_test
+
+    # ------------------------------------------------------------------ #
+    def run_round(self, t: int) -> RoundLog:
+        cfg = self.cfg
+        values = self._values(t)
+        sched = self._schedule(values)
+        sel = sched.selected
+        if sel.size == 0:
+            # Degenerate channel draw: no UE meets the deadline, so the
+            # server forces the single highest-value UE. Rewrite the
+            # schedule so the logged objective / selection vector describe
+            # the actual participant set, not the empty one.
+            k = int(np.argmax(values))
+            sel = np.array([k])
+            x = np.zeros(cfg.n_ues, bool)
+            x[k] = True
+            alpha = np.zeros(cfg.n_ues)
+            alpha[k] = 1.0          # the forced UE gets the whole band
+            sched = Schedule(x=x, alpha=alpha, cost=sched.cost,
+                             value=sched.value)
+
+        if self.engine == "vectorized":
+            acc_local, acc_test = self._run_cohort_vectorized(sel)
+        else:
+            acc_local, acc_test = self._run_cohort_loop(sel)
+        self.reputation.update(sel, acc_local, acc_test)
+
+        g_acc = float(mlp_accuracy(self.params, self._tx, self._ty))
         src_acc = float("nan")
         if self.watch_class is not None:
             m = self.test.y == self.watch_class

@@ -6,6 +6,10 @@ Protocol (paper §V-A): synthetic-MNIST 50k/10k; sort-by-label groups of 50;
 1-30 groups per UE; K=50 UEs, 5 random malicious with a label-flip attack
 ((6,2) easy / (8,4) hard); 2-layer MLP via FedAvg; 15 rounds; results
 averaged over independent runs.
+
+``engine`` selects the cohort execution path: "vectorized" (default) runs
+every scheduled UE in one vmapped step; "loop" is the original sequential
+per-client oracle (see federated/server.py).
 """
 from __future__ import annotations
 
@@ -31,7 +35,8 @@ def run_experiment(policy: str = "dqs",
                    rounds: Optional[int] = None,
                    no_attack: bool = False,
                    model_poison_scale: Optional[float] = None,
-                   lie_boost: float = 0.0) -> Dict:
+                   lie_boost: float = 0.0,
+                   engine: str = "vectorized") -> Dict:
     cfg = cfg or FeelConfig()
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0], omega_div=omega[1])
@@ -50,7 +55,7 @@ def run_experiment(policy: str = "dqs",
     server = FeelServer(cfg, clients, test, rng, policy=policy,
                         adaptive_omega=adaptive_omega,
                         watch_class=attack_pair[0], model_poison=mp,
-                        lie_boost=lie_boost)
+                        lie_boost=lie_boost, engine=engine)
     logs = server.run(rounds)
     return {
         "acc": [l.global_acc for l in logs],

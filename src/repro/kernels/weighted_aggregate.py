@@ -26,16 +26,26 @@ def _agg_kernel(w_ref, x_ref, o_ref, *, n):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def weighted_aggregate(stacked, weights, *, block_m=2048, interpret=False):
-    """stacked (N, M), weights (N,) -> (M,) weighted mean."""
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret",
+                                              "assume_normalized"))
+def weighted_aggregate(stacked, weights, *, block_m=2048, interpret=False,
+                       assume_normalized=False):
+    """stacked (N, M), weights (N,) -> (M,) weighted mean.
+
+    assume_normalized — weights already sum to 1 (e.g. pre-normalised in
+    float64 by ``federated.aggregation``); skip the in-graph renormalisation
+    so the caller's rounding is preserved exactly.
+    """
     N, M = stacked.shape
     block_m = min(block_m, M)
     pad = (-M) % block_m
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
     Mp = M + pad
-    w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(jnp.float32)
+    if assume_normalized:
+        w = jnp.asarray(weights, jnp.float32)
+    else:
+        w = (weights / jnp.maximum(weights.sum(), 1e-9)).astype(jnp.float32)
 
     kernel = functools.partial(_agg_kernel, n=N)
     out = pl.pallas_call(

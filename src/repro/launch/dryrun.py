@@ -122,8 +122,23 @@ def _compile_one(cfg, shape, mesh, optimizer: str, extra_specs_fn=None):
     return compiled, t_lower, t_compile
 
 
+def cost_dict(compiled) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a flat dict; newer versions return a (per-device)
+    list of dicts — one entry per addressable device, identical under SPMD,
+    so the first entry is the per-chip cost either way.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _extract(compiled):
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     coll = rl.collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)
@@ -248,7 +263,7 @@ def cohort_dryrun(multi_pod: bool, agg_dtype=None, label="feel-cohort-mlp") -> d
         with mesh:
             lowered = step.lower(params, batch, vec, vec)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_dict(compiled)
         coll = rl.collective_bytes(compiled.as_text())
         terms = rl.roofline_terms(float(cost.get("flops", 0)),
                                   float(cost.get("bytes accessed", 0)), coll)

@@ -58,3 +58,59 @@ def mlp_sgd_epoch(params, x, y, lr, batch_size: int = 50):
 
     params, _ = jax.lax.scan(body, params, jnp.arange(nb))
     return params
+
+
+# ---------------------------------------------------------------------- #
+# Masked variants — the vectorized cohort engine's contract: client
+# datasets are zero-padded to a uniform length with a {0,1} validity mask;
+# a padded sample must contribute *exactly* zero gradient so the padded run
+# reproduces the unpadded one. For a fully valid batch the masked mean
+# reduces to ``jnp.mean`` (mask sum == batch_size), so batches the plain
+# epoch would see are numerically identical, and a fully padded batch is a
+# strict no-op (zero gradient -> params unchanged bit-for-bit).
+# ---------------------------------------------------------------------- #
+def mlp_loss_masked(params, batch):
+    """Mean cross-entropy over the valid samples of a batch.
+
+    batch["m"] (B,) float validity mask; padding rows carry m == 0.
+    """
+    logits = mlp_apply(params, batch["x"])
+    labels, m = batch["y"], batch["m"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def mlp_accuracy_masked(params, x, y, m):
+    """Accuracy over the valid samples only (0.0 when the mask is empty)."""
+    correct = (jnp.argmax(mlp_apply(params, x), -1) == y).astype(jnp.float32)
+    return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+@partial(jax.jit, static_argnums=(5,))
+def mlp_sgd_epoch_masked(params, x, y, m, lr, batch_size: int = 50):
+    """Masked twin of ``mlp_sgd_epoch`` over a padded client dataset.
+
+    x (S, D), y (S,), m (S,) with S a multiple of batch_size; batches that
+    fall entirely in the padding leave params untouched. The batch grid is
+    a reshape (row-major, so batch i covers the same rows the plain epoch
+    slices) scanned on the leading axis — cheaper to trace/compile under
+    vmap than per-step dynamic slicing, with identical values.
+    """
+    n = x.shape[0]
+    assert n % batch_size == 0, (
+        f"padded length {n} must be a multiple of batch_size {batch_size} "
+        "(pad_clients(multiple_of=batch_size) guarantees this)")
+    nb = n // batch_size
+    xb = x.reshape(nb, batch_size, -1)
+    yb = y.reshape(nb, batch_size)
+    mb = m.reshape(nb, batch_size)
+
+    def body(params, batch):
+        bx, by, bm = batch
+        g = jax.grad(mlp_loss_masked)(params, {"x": bx, "y": by, "m": bm})
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, 0.0
+
+    params, _ = jax.lax.scan(body, params, (xb, yb, mb))
+    return params

@@ -1,0 +1,40 @@
+"""Degrade gracefully when ``hypothesis`` is not installed (offline
+container): property tests skip individually instead of erroring the whole
+module at collection time.
+
+Test modules import the hypothesis API from here::
+
+    from hypothesis_compat import given, settings, st
+
+With hypothesis installed this is a plain re-export. Without it, ``st.*``
+strategy constructors become inert stubs and ``@given(...)`` replaces the
+test with a zero-argument function that calls ``pytest.skip`` — so the
+plain (non-property) tests in the same module still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco

@@ -29,13 +29,40 @@ def test_weighted_mean():
 
 
 def test_stacked_matches_list():
+    """Regression (tolerance-tight): the list and stacked forms share one
+    normalisation (float64 on host) and one float32 combine path, so they
+    agree exactly — the seed normalised in different dtypes and drifted by
+    ~1e-8, which pure-rtol comparison amplified on near-zero params."""
     ps = [_params(i) for i in range(4)]
     w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
     a = fedavg_stacked(stacked, w)
     b = fedavg(ps, [1, 2, 3, 4])
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-        np.testing.assert_allclose(x, y, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_stacked_matches_list_uneven_weights():
+    """Same check with weights whose normalisation is inexact in float32."""
+    ps = [_params(i) for i in range(3)]
+    w = [7.0, 11.0, 3.0]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    a = fedavg_stacked(stacked, jnp.asarray(w))
+    b = fedavg(ps, w)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_stacked_kernel_path_matches_xla_path():
+    """The Pallas flattened-kernel route of fedavg_stacked (interpret mode
+    off-TPU) agrees with the XLA reduction route."""
+    ps = [_params(i) for i in range(4)]
+    w = jnp.asarray([2.0, 5.0, 1.0, 4.0])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    a = fedavg_stacked(stacked, w, kernel=True)
+    b = fedavg_stacked(stacked, w, kernel=False)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-7)
 
 
 def test_kernel_tree_aggregate_matches():

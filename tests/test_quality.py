@@ -1,7 +1,7 @@
 """Diversity (Eq. 2), reputation (Eq. 1) and data-quality value (Eq. 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import FeelConfig
 from repro.core.diversity import diversity_index, gini_simpson, normalize

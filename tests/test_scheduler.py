@@ -1,7 +1,7 @@
 """DQS scheduler (paper Alg. 2) invariants + exact-knapsack comparison."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import FeelConfig
 from repro.core.scheduler import (best_channel_schedule, brute_force_schedule,

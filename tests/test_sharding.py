@@ -84,6 +84,12 @@ with mesh:
     compiled = jax.jit(fn).lower(mk(params, pspecs), mk(opt_sds, ospecs),
                                  step_in, batch).compile()
 cost = compiled.cost_analysis()
+# newer JAX returns a per-device list of dicts (same logic as
+# repro.launch.dryrun.cost_dict, inlined here: importing dryrun would
+# clobber this subprocess's 8-device XLA_FLAGS with its 512)
+if isinstance(cost, (list, tuple)):
+    cost = cost[0] if cost else {}
+cost = cost or {}
 assert cost.get("flops", 0) > 0
 print("COMPILED_OK", int(cost.get("flops", 0)))
 """

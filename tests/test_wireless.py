@@ -1,7 +1,7 @@
 """Wireless model (paper Eq. 4-7, 9) properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import FeelConfig
 from repro.core.wireless import WirelessModel, dbm_to_watt
