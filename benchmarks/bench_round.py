@@ -2,7 +2,10 @@
 cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
 
     PYTHONPATH=src python -m benchmarks.bench_round                # K=50,200,500
-    PYTHONPATH=src python -m benchmarks.bench_round --ks 50 --rounds 5
+    PYTHONPATH=src python -m benchmarks.bench_round --ks 500 \
+        --engines unbucketed vectorized         # single pad vs 3 size buckets
+    PYTHONPATH=src python -m benchmarks.bench_round --sweep        # run_sweep
+    PYTHONPATH=src python -m benchmarks.bench_round --smoke        # CI gate
 
 Methodology — each (engine, K) measurement runs the §V unit of work in a
 FRESH subprocess (cold jit cache): ``--seeds`` independent experiments
@@ -15,9 +18,22 @@ every fresh partition. The cohort engine compiles a handful of bucketed
 (N, max_samples) programs that are shape-stable across seeds. The
 per-round median (compiles mostly excluded) is reported alongside.
 
+Engines: ``loop`` (sequential oracle), ``vectorized`` (size-bucketed
+cohort engine, ``--buckets`` levels), ``unbucketed`` (vectorized with a
+single global pad — the pre-bucketing baseline).
+
+``--sweep`` instead measures a (policies x seeds) study end-to-end:
+batched ``run_sweep`` vs the same grid as sequential ``run_experiment``
+calls (each mode in a fresh subprocess).
+
+``--smoke`` runs a tiny instance of both benchmarks with loud assertions
+(bucketed padding waste must not exceed the single-pad waste; curves must
+be finite) — wired into tier-1 via tests/test_bench_smoke.py so bench
+regressions fail loudly.
+
 CSV rows:
 
-    engine,K,n_train,s_per_round,median_round_s,speedup,median_speedup
+    engine,K,n_train,s_per_round,median_round_s,speedup,median_speedup,pad_waste
 """
 import argparse
 import json
@@ -37,40 +53,79 @@ from repro.data.partition import partition
 from repro.data.synthetic_mnist import generate
 from repro.federated.server import FeelServer
 
-engine, k, n_train, n_test, rounds, seeds = (
+engine, k, n_train, n_test, rounds, seeds, n_buckets = (
     sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
-    int(sys.argv[5]), int(sys.argv[6]))
+    int(sys.argv[5]), int(sys.argv[6]), int(sys.argv[7]))
 cfg = FeelConfig(n_ues=k, n_malicious=max(k // 10, 1))
-times = []
+times, wastes = [], []
 for seed in range(seeds):
     train, test = generate(n_train, n_test, seed=seed)
     rng = np.random.default_rng(seed)
     malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
     clients = partition(train, cfg.n_ues, rng, malicious,
                         LabelFlipAttack(*EASY_PAIR))
-    server = FeelServer(cfg, clients, test, rng, policy="dqs", engine=engine)
+    server = FeelServer(cfg, clients, test, rng, policy="dqs",
+                        engine=engine, n_buckets=n_buckets)
     for t in range(rounds):
         t0 = time.perf_counter()
         server.run_round(t)
         times.append(time.perf_counter() - t0)
-print(json.dumps(times))
+    wastes.extend(server.pad_waste)
+print(json.dumps({"times": times, "waste": wastes}))
 """
 
+_SWEEP_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.federated.simulation import run_experiment, run_sweep
 
-def _measure(engine, k, n_train, n_test, rounds, seeds):
+mode, n_seeds, n_train, n_test, rounds = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]))
+policies = ["dqs", "top_value"]
+seeds = list(range(n_seeds))
+t0 = time.perf_counter()
+if mode == "sweep":
+    res = run_sweep(policies, seeds=seeds, n_train=n_train, n_test=n_test,
+                    rounds=rounds)
+    accs = [r["acc"] for r in res.runs]
+else:
+    accs = [run_experiment(p, (6, 2), seed=s, n_train=n_train,
+                           n_test=n_test, rounds=rounds)["acc"]
+            for p in policies for s in seeds]
+el = time.perf_counter() - t0
+assert all(np.isfinite(a).all() for a in map(np.asarray, accs))
+print(json.dumps({"s_total": el, "n_runs": len(accs)}))
+"""
+
+# engine CLI name -> (FeelServer engine, n_buckets override or None)
+ENGINES = {"loop": ("loop", None),
+           "vectorized": ("vectorized", None),
+           "unbucketed": ("vectorized", 1)}
+
+
+def _run_worker(code, argv, timeout=3600):
     r = subprocess.run(
-        [sys.executable, "-c", _WORKER,
-         engine, str(k), str(n_train), str(n_test), str(rounds), str(seeds)],
+        [sys.executable, "-c", code] + [str(a) for a in argv],
         capture_output=True, text=True,
         env={**os.environ,
              "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH",
                                                              "")},
-        timeout=3600)
+        timeout=timeout)
     assert r.returncode == 0, r.stderr[-2000:]
-    times = json.loads(r.stdout.strip().splitlines()[-1])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _measure(name, k, n_train, n_test, rounds, seeds, buckets):
+    engine, nb = ENGINES[name]
+    out = _run_worker(_WORKER, [engine, k, n_train, n_test, rounds, seeds,
+                                nb if nb is not None else buckets])
+    times = out["times"]
     mean = sum(times) / len(times)
     median = sorted(times)[(len(times) - 1) // 2]   # lower-biased: keeps
-    return mean, median, times                      # compile rounds out
+    waste = (sum(out["waste"]) / len(out["waste"])  # compile rounds out
+             if out["waste"] else float("nan"))
+    return mean, median, times, waste
 
 
 def _auto_n_train(k: int) -> int:
@@ -80,19 +135,54 @@ def _auto_n_train(k: int) -> int:
     return min(50_000, max(10_000, 100 * k))
 
 
-def bench_k(k, n_train, n_test, rounds, seeds):
+def bench_k(k, n_train, n_test, rounds, seeds, engines, buckets):
     nt = n_train or _auto_n_train(k)
     out = {}
-    for engine in ("loop", "vectorized"):
-        out[engine] = _measure(engine, k, nt, n_test, rounds, seeds)
-        print(f"# {engine} K={k} per-round s: "
-              f"{[round(x, 2) for x in out[engine][2]]}", file=sys.stderr)
-    cl, sl = out["loop"][:2]
-    for engine in ("loop", "vectorized"):
-        c, s, _ = out[engine]
-        print(f"{engine},{k},{nt},{c:.3f},{s:.3f},{cl / c:.2f},{sl / s:.2f}",
-              flush=True)
-    return cl / out["vectorized"][0]
+    for name in engines:
+        out[name] = _measure(name, k, nt, n_test, rounds, seeds, buckets)
+        print(f"# {name} K={k} per-round s: "
+              f"{[round(x, 2) for x in out[name][2]]}", file=sys.stderr)
+    base = engines[0]
+    cl, sl = out[base][:2]
+    for name in engines:
+        c, s, _, w = out[name]
+        print(f"{name},{k},{nt},{c:.3f},{s:.3f},{cl / c:.2f},{sl / s:.2f},"
+              f"{w:.2f}", flush=True)
+    return out
+
+
+def bench_sweep(n_seeds, n_train, n_test, rounds):
+    """Batched run_sweep vs the same grid of sequential run_experiment
+    calls — each mode cold, in a fresh subprocess."""
+    print("mode,n_runs,s_total,speedup")
+    res = {}
+    for mode in ("sequential", "sweep"):
+        res[mode] = _run_worker(_SWEEP_WORKER,
+                                [mode, n_seeds, n_train, n_test, rounds])
+    base = res["sequential"]["s_total"]
+    for mode in ("sequential", "sweep"):
+        r = res[mode]
+        print(f"{mode},{r['n_runs']},{r['s_total']:.1f},"
+              f"{base / r['s_total']:.2f}", flush=True)
+    return base / res["sweep"]["s_total"]
+
+
+def smoke():
+    """Tiny end-to-end run of both benchmarks with loud assertions.
+
+    K=40 is the smallest scale where size bucketing reliably beats the
+    single global pad (below ~3x _N_BUCKET the cohort-axis padding of 2-3
+    sub-cohorts outweighs the max_samples savings)."""
+    out = bench_k(40, 4000, 300, 2, 1,
+                  ["unbucketed", "vectorized"], buckets=3)
+    w_un, w_b = out["unbucketed"][3], out["vectorized"][3]
+    assert w_b <= w_un + 1e-9, (
+        f"bucketed padding waste {w_b:.2f}x exceeds single-pad {w_un:.2f}x")
+    assert all(t > 0 for name in out for t in out[name][2])
+    speedup = bench_sweep(2, 3000, 300, 2)
+    assert speedup > 0, speedup
+    print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
+          f"sweep speedup {speedup:.2f}x", file=sys.stderr)
 
 
 def main():
@@ -104,15 +194,36 @@ def main():
     ap.add_argument("--n-train", type=int, default=None,
                     help="override the per-K automatic corpus size")
     ap.add_argument("--n-test", type=int, default=1_000)
+    ap.add_argument("--engines", nargs="+", default=["loop", "vectorized"],
+                    choices=sorted(ENGINES),
+                    help="speedup columns are relative to the first")
+    ap.add_argument("--buckets", type=int, default=3,
+                    help="size-bucket count for the 'vectorized' engine "
+                         "(the 'unbucketed' engine pins 1)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="benchmark run_sweep vs sequential run_experiment "
+                         "(uses --seeds as the seed count)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny asserted run of both benchmarks (CI gate)")
     args = ap.parse_args()
 
+    if args.smoke:
+        smoke()
+        return
+    if args.sweep:
+        bench_sweep(args.seeds, args.n_train or 10_000, args.n_test,
+                    args.rounds)
+        return
+
     print("engine,K,n_train,s_per_round,median_round_s,"
-          "speedup,median_speedup")
+          "speedup,median_speedup,pad_waste")
     for k in args.ks:
-        speedup = bench_k(k, args.n_train, args.n_test, args.rounds,
-                          args.seeds)
-        print(f"# K={k}: vectorized per-round speedup {speedup:.2f}x",
-              file=sys.stderr)
+        out = bench_k(k, args.n_train, args.n_test, args.rounds,
+                      args.seeds, args.engines, args.buckets)
+        base, last = args.engines[0], args.engines[-1]
+        if base != last:
+            print(f"# K={k}: {last} per-round speedup over {base} "
+                  f"{out[base][0] / out[last][0]:.2f}x", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -24,25 +24,39 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.base import FeelConfig
-from repro.federated.simulation import run_experiment
+from repro.federated.simulation import run_sweep
 
 OMEGAS = [("div_only", (0.0, 1.0)), ("rep_only", (1.0, 0.0)),
           ("both", (0.5, 0.5))]
 PAIRS = [("easy_6to2", (6, 2)), ("hard_8to4", (8, 4))]
 
 
-def curve(policy, pair, omega, cfg, seeds, no_attack=False, **kw):
-    runs = [run_experiment(policy, pair, cfg=cfg, seed=s, omega=omega,
-                           no_attack=no_attack, **kw) for s in seeds]
-    acc = np.mean([r["acc"] for r in runs], axis=0)
-    src = np.mean([r["source_acc"] for r in runs], axis=0)
-    mal = np.mean([r["malicious_selected"] for r in runs], axis=0)
-    return {"acc": [round(float(a), 4) for a in acc],
-            "source_acc": [round(float(a), 4) for a in src],
-            "malicious_selected_mean": [round(float(m), 2) for m in mal],
+def curves(policies, pair, omega, cfg, seeds, no_attack=False, **kw):
+    """One batched sweep over (policies x seeds); per-policy seed-averaged
+    summaries. All seeds (and policies) of a setting run as stacked
+    cohorts — one vmapped train/eval call per size bucket per round."""
+    res = run_sweep(policies, seeds=seeds, attack_pairs=[pair], cfg=cfg,
+                    omega=omega, no_attack=no_attack, **kw)
+    out = {}
+    for policy in policies:
+        runs = res.select(policy=policy)
+        out[policy] = {
+            "acc": [round(float(a), 4)
+                    for a in res.mean_curve("acc", policy=policy)],
+            "source_acc": [round(float(a), 4) for a in
+                           res.mean_curve("source_acc", policy=policy)],
+            "malicious_selected_mean":
+                [round(float(m), 2) for m in
+                 res.mean_curve("malicious_selected", policy=policy)],
             "rep_gap": round(float(np.mean(
                 [r["final_reputation_honest"]
                  - r["final_reputation_malicious"] for r in runs])), 4)}
+    return out
+
+
+def curve(policy, pair, omega, cfg, seeds, no_attack=False, **kw):
+    return curves([policy], pair, omega, cfg, seeds,
+                  no_attack=no_attack, **kw)[policy]
 
 
 def main():
@@ -51,9 +65,9 @@ def main():
                     help="reduced scale (12k samples, 8 rounds, 2 seeds)")
     ap.add_argument("--engine", choices=["vectorized", "loop"],
                     default="vectorized",
-                    help="cohort execution engine (the vectorized engine "
-                         "makes this multi-seed sweep feasible; 'loop' is "
-                         "the sequential oracle)")
+                    help="cohort execution engine (the vectorized engine + "
+                         "run_sweep batching make this multi-seed study "
+                         "feasible; 'loop' is the sequential oracle)")
     args = ap.parse_args()
     if args.fast:
         kw = dict(n_train=12_000, n_test=2_000, rounds=8)
@@ -82,13 +96,14 @@ def main():
                 key = f"fig3_{pair_tag}_{regime}_{om_tag}"
                 results[key] = curve("dqs", pair, omega, cfg, seeds, **kw)
                 print(f"{key}: {results[key]['acc']}")
-        # baselines for context
-        for pol in ["random", "best_channel", "max_count"]:
+        # baselines for context — one batched sweep over all three policies
+        base = curves(["random", "best_channel", "max_count"], pair,
+                      (0.5, 0.5), FeelConfig(model_size_bits=5e6 * 8),
+                      seeds, **kw)
+        for pol, summary in base.items():
             key = f"baseline_{pair_tag}_{pol}"
-            results[key] = curve(pol, pair, (0.5, 0.5),
-                                 FeelConfig(model_size_bits=5e6 * 8),
-                                 seeds, **kw)
-            print(f"{key}: {results[key]['acc']}")
+            results[key] = summary
+            print(f"{key}: {summary['acc']}")
 
     os.makedirs("results", exist_ok=True)
     with open("results/poisoning_study.json", "w") as f:

@@ -6,6 +6,13 @@ total bandwidth (8c/8d) and binary selection (8e) — is knapsack-equivalent
 (minimum number of uniform 1/K fractions meeting its minimum rate, Eq. 9),
 order by ``V_k / c_k`` decreasing, and pack into the budget of K fractions.
 
+Approximation guarantee: density-greedy alone can be arbitrarily bad (one
+expensive high-value UE displaced by a cheap low-value one that blocks the
+budget), so ``dqs_schedule`` finishes with the classic modified-greedy step —
+take the better of the greedy pack and the single best feasible UE — which
+guarantees ``objective >= OPT / 2`` (tests/test_scheduler.py pins this
+against ``brute_force_schedule`` on random instances).
+
 Baseline policies used by the paper's comparison figures are provided too,
 plus a brute-force exact solver for small K (test oracle for the NP-hard
 claim).
@@ -39,7 +46,10 @@ class Schedule:
 
 def dqs_schedule(values: np.ndarray, costs: np.ndarray,
                  cfg: FeelConfig) -> Schedule:
-    """Algorithm 2: greedy knapsack by V_k / c_k over a budget of K fractions."""
+    """Algorithm 2: greedy knapsack by V_k / c_k over a budget of K fractions,
+    then the modified-greedy fallback (see module docstring): if the single
+    best feasible UE beats the whole greedy pack, schedule it alone — this is
+    what makes the 1/2-approximation bound hold."""
     K = cfg.n_ues
     order = np.argsort(-values / costs, kind="stable")
     x = np.zeros(K, bool)
@@ -55,13 +65,26 @@ def dqs_schedule(values: np.ndarray, costs: np.ndarray,
             budget -= c
         if budget <= 0:
             break
+    feas = costs <= K
+    if feas.any():
+        k_best = int(np.flatnonzero(feas)[np.argmax(values[feas])])
+        if values[k_best] > values[x].sum():
+            x = np.zeros(K, bool)
+            x[k_best] = True
+            alpha = np.zeros(K)
+            alpha[k_best] = costs[k_best] / K
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
 def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
                          cfg: FeelConfig, max_k: int = 16) -> Schedule:
-    """Exact knapsack by enumeration — oracle for tests (K <= max_k)."""
-    K = len(values)
+    """Exact knapsack by enumeration — oracle for tests (K <= max_k).
+
+    Same semantics as the greedy path: K and the fraction budget come from
+    ``cfg.n_ues`` (the seed ignored ``cfg`` and used ``len(values)``, which
+    silently changed the budget whenever the two disagreed)."""
+    K = cfg.n_ues
+    assert len(values) == K, (len(values), K)
     assert K <= max_k, "brute force limited to small K"
     best, best_x = -1.0, np.zeros(K, bool)
     feas = [k for k in range(K) if costs[k] <= K]
@@ -129,15 +152,20 @@ def max_count_schedule(values, costs, cfg) -> Schedule:
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
-def top_value_schedule(values, cfg, n: int) -> Schedule:
-    """Paper §V-B.1: pick the n highest-V_k UEs (no wireless constraint)."""
+def top_value_schedule(values, costs, cfg, n: int) -> Schedule:
+    """Paper §V-B.1: pick the n highest-V_k UEs (no wireless constraint).
+
+    Selection ignores the channel entirely, but the round log must still
+    report the UEs' *real* wireless costs — the seed fabricated
+    ``costs = ones(K)``, so every ``top_value`` Schedule.cost misreported
+    the channel state (``FeelServer._schedule`` now threads the actual
+    Eq. 9 costs through)."""
     K = cfg.n_ues
     order = np.argsort(-values, kind="stable")[:n]
     x = np.zeros(K, bool)
     x[order] = True
     alpha = np.where(x, 1.0 / max(n, 1), 0.0)
-    costs = np.ones(K, int)
-    return Schedule(x=x, alpha=alpha, cost=costs, value=values)
+    return Schedule(x=x, alpha=alpha, cost=np.asarray(costs), value=values)
 
 
 POLICIES = {

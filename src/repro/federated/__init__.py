@@ -2,9 +2,12 @@ from repro.federated.aggregation import (fedavg, fedavg_stacked,
                                          normalize_weights)
 from repro.federated.client import ClientReport, local_train
 from repro.federated.cohort import cohort_eval, cohort_train
-from repro.federated.server import FeelServer, RoundLog
-from repro.federated.simulation import averaged, run_experiment
+from repro.federated.server import (CohortData, FeelServer, RoundLog,
+                                    build_cohort_data)
+from repro.federated.simulation import (SweepResult, averaged,
+                                        run_experiment, run_sweep)
 
 __all__ = ["fedavg", "fedavg_stacked", "normalize_weights", "ClientReport",
-           "local_train", "cohort_eval", "cohort_train", "FeelServer",
-           "RoundLog", "averaged", "run_experiment"]
+           "local_train", "cohort_eval", "cohort_train", "CohortData",
+           "FeelServer", "RoundLog", "build_cohort_data", "SweepResult",
+           "averaged", "run_experiment", "run_sweep"]

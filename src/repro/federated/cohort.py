@@ -17,8 +17,18 @@ contract) and all N local trainings run in ONE jitted, vmapped program:
 
 Shapes are cohort-size dependent, so each distinct (N, max_samples) pair
 compiles once and is cached for all later rounds; padding max_samples to a
-round-stable value (pad_clients pads to the global client maximum) keeps
-the number of distinct shapes equal to the number of distinct cohort sizes.
+round-stable value keeps the number of distinct shapes small.
+
+Size-bucketed sub-cohorts: padding every client to the *global* maximum
+wastes ~2x the real sample count under the paper's 1-30 group allocation,
+so the server splits a round's cohort into 2-3 ``max_samples`` buckets
+(``data.partition.bucket_levels`` — quantized so compiles stay cached),
+trains each bucket with ``cohort_train``, and merges the per-bucket stacks
+back into selection order (``merge_stacks``) for ONE ``fedavg_stacked``
+call whose weights span all buckets. ``cohort_train_multi`` is the
+multi-run variant (per-row parameters) used by the batched sweep runner in
+``federated/simulation.py`` — seeds/policies become one more slice of the
+client axis.
 """
 from __future__ import annotations
 
@@ -51,6 +61,80 @@ def cohort_train(params, x, y, mask, lr, epochs: int, batch_size: int = 50):
         return p, mlp_accuracy_masked(p, xi, yi, mi)
 
     return jax.vmap(one)(x, y, mask)
+
+
+@partial(jax.jit, static_argnames=("epochs", "batch_size"))
+def cohort_train_multi(stacked_params, x, y, mask, lr, epochs: int,
+                       batch_size: int = 50):
+    """``cohort_train`` with *per-client* parameters (leaves (N, ...)).
+
+    The batched sweep runner's entry point: rows gathered from different
+    runs (policy x seed x attack-pair) carry different global models, so the
+    run axis folds into the client vmap axis — one compiled program trains
+    an arbitrary mix of runs as long as the padded (N, S) shape matches.
+    Row results are independent, so a row trains identically whether its
+    run's cohort is stacked alone or with other runs.
+    """
+    def one(p, xi, yi, mi):
+        q = jax.lax.fori_loop(
+            0, epochs,
+            lambda _, r: mlp_sgd_epoch_masked(r, xi, yi, mi, lr, batch_size),
+            p)
+        return q, mlp_accuracy_masked(q, xi, yi, mi)
+
+    return jax.vmap(one)(stacked_params, x, y, mask)
+
+
+def pad_count(n: int, multiple: int = 8) -> int:
+    """Cohort-axis padding target: next power of two below ``multiple``
+    (1, 2, 4), multiples of ``multiple`` above. Keeps the set of compiled
+    cohort shapes small WITHOUT ballooning small sub-cohorts — padding a
+    2-row bucket to 8 rows would quadruple its training work, which at
+    small K costs more than size-bucketing saves."""
+    assert n >= 1
+    if n >= multiple:
+        return -(-n // multiple) * multiple
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def merge_stacks(stacked_list, order=None):
+    """Concatenate per-bucket stacked pytrees on axis 0; ``order`` (optional
+    int array) then permutes rows — the bucketed engine uses it to restore
+    the schedule's selection order so FedAvg accumulates in exactly the
+    order the loop oracle uses (bit-for-bit parity)."""
+    merged = (stacked_list[0] if len(stacked_list) == 1 else
+              jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=0),
+                           *stacked_list))
+    if order is not None:
+        idx = jnp.asarray(order)
+        merged = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), merged)
+    return merged
+
+
+def pad_stacked(stacked, n_total: int):
+    """Zero-pad a stacked pytree's leading axis to ``n_total`` rows.
+
+    Null rows get weight 0 in ``fedavg_stacked`` (exact +0.0 contribution)
+    and an all-zero eval mask (score 0.0, discarded), so padding the cohort
+    axis to a stable multiple keeps compiled eval/aggregate programs
+    cache-hot without perturbing results.
+    """
+    def pad(l):
+        n = l.shape[0]
+        if n == n_total:
+            return l
+        return jnp.concatenate(
+            [l, jnp.zeros((n_total - n,) + l.shape[1:], l.dtype)], axis=0)
+    return jax.tree.map(pad, stacked)
+
+
+def broadcast_params(params, n: int):
+    """Tile a single parameter pytree to (n, ...) rows (sweep stacking)."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p, (n,) + p.shape),
+                        params)
 
 
 @jax.jit

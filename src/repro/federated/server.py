@@ -9,13 +9,23 @@ channel state. It never touches raw client data.
 Two execution engines implement Alg. 1 lines 9-14:
 
     "vectorized" (default) — the cohort engine (federated/cohort.py): the
-        round's scheduled UEs are stacked into (N, max_samples, ...) arrays
-        and trained in one jitted vmapped step; the per-model test
-        evaluations run as a single vmap and aggregation goes through the
-        stacked ``fedavg_stacked`` path.
+        round's scheduled UEs are split into ``n_buckets`` size buckets
+        (``data.partition.bucket_levels`` — each bucket padded only to its
+        own quantized max_samples level, reclaiming the ~2x padding waste
+        of a single global pad), each bucket trains in one jitted vmapped
+        step, the per-bucket stacks are merged back into selection order,
+        and evaluation + aggregation run once on the merged stack — a
+        single ``fedavg_stacked`` call whose weights span all buckets.
+        Per-round padding overhead is recorded in ``FeelServer.pad_waste``
+        (padded train slots / real samples).
     "loop" — the original sequential per-client loop, kept as the
         correctness oracle (tests/test_cohort.py pins the engines to the
         same accuracy curve).
+
+The padded device-resident client arrays live in a ``CohortData`` that can
+be shared by several servers running on the same (dataset, partition) —
+the batched sweep runner (federated/simulation.py::run_sweep) builds it
+once per (seed, attack-pair) and fans it out across policies.
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
@@ -31,7 +42,8 @@ from repro.core import (ReputationTracker, WirelessModel, data_quality_value,
                         top_value_schedule)
 from repro.core.scheduler import (Schedule, best_channel_schedule,
                                   max_count_schedule, random_schedule)
-from repro.data.partition import ClientData, label_histogram, pad_clients
+from repro.data.partition import (ClientData, label_histogram,
+                                  pad_clients_bucketed)
 from repro.data.synthetic_mnist import Dataset, N_CLASSES
 from repro.federated import cohort
 from repro.federated.aggregation import fedavg, fedavg_stacked
@@ -49,6 +61,63 @@ class RoundLog:
     values: np.ndarray
     reputations: np.ndarray
     source_acc: float = float("nan")   # accuracy on the attacked class
+    # True when the schedule was degenerate (no UE met the deadline) and the
+    # server forced the highest-value UE. Problem (8) had no feasible point,
+    # so ``objective`` is reported as 0.0 for forced rounds — the forced
+    # UE's V_k must not be credited to the scheduler.
+    forced: bool = False
+
+
+@dataclasses.dataclass
+class CohortData:
+    """Device-resident padded client layout for the vectorized engine.
+
+    ``buckets[b]`` holds one size bucket's stacked arrays (x, y, mask) with
+    one extra all-zero "null client" row appended at index ``null`` —
+    cohort-size padding gathers it for a strict training no-op. Built once
+    per (dataset, partition) and shareable across servers (policies) —
+    ``run_sweep`` exploits this to amortise padding + host-to-device
+    transfer across a whole sweep.
+    """
+    buckets: List[Dict]       # x/y/mask device arrays, level, null row idx
+    bucket_of: np.ndarray     # (K,) bucket index per client
+    row_of: np.ndarray        # (K,) row within the client's bucket arrays
+    mask_dev: jax.Array       # (K+1, T) per-UE eval masks + null row
+    sizes: np.ndarray         # (K,) true sample counts
+
+
+def build_cohort_data(clients: List[ClientData], test_mask_arr: np.ndarray,
+                      batch_size: int = 50, pad_to: Optional[int] = None,
+                      n_buckets: int = 3) -> CohortData:
+    """Bucket, pad and device-place the clients (see CohortData).
+
+    test_mask_arr — (K, T) float {0,1} per-UE evaluation masks (the server
+    restricts Eq. 1's acc_test to the classes a UE claims to hold).
+    """
+    bucketed = pad_clients_bucketed(clients, n_buckets=n_buckets,
+                                    multiple_of=batch_size, pad_to=pad_to)
+    K = len(clients)
+    bucket_of = np.full(K, -1)
+    row_of = np.full(K, -1)
+    zrow = lambda a: np.concatenate([a, np.zeros_like(a[:1])])
+    buckets = []
+    for b, (ids, pd) in enumerate(bucketed):
+        # loop-engine parity contract: the loop's mlp_sgd_epoch DROPS a
+        # tail batch (nb = n // batch_size) while the masked engine would
+        # train it, so a non-dividing batch_size must fail loudly
+        assert not np.any(pd.sizes % batch_size), (
+            "vectorized engine requires batch_size to divide every "
+            "client dataset size (the loop oracle drops tail batches)")
+        bucket_of[ids] = b
+        row_of[ids] = np.arange(ids.size)
+        buckets.append({
+            "x": jnp.asarray(zrow(pd.x)), "y": jnp.asarray(zrow(pd.y)),
+            "mask": jnp.asarray(zrow(pd.mask)),
+            "level": pd.max_samples, "null": ids.size})
+    return CohortData(
+        buckets=buckets, bucket_of=bucket_of, row_of=row_of,
+        mask_dev=jnp.asarray(zrow(test_mask_arr)),
+        sizes=np.array([c.size for c in clients], float))
 
 
 class FeelServer:
@@ -56,6 +125,14 @@ class FeelServer:
     'top_value' reproduces §V-B.1 (pure data-quality selection, no wireless).
 
     engine: 'vectorized' | 'loop' (see module docstring).
+    n_buckets: number of max_samples size buckets for the vectorized
+    engine (1 = the old single global pad; 2-3 reclaim the padding waste).
+
+    The underscore round-phase methods (_schedule_round, _cohort_parts,
+    _merge_cohort, _apply_attacks, _eval_masks, _aggregate_cohort,
+    _finalize_round) are a semi-public contract: the batched sweep runner
+    (federated/simulation.py) interleaves them across runs — change their
+    signatures and the sweep changes with them.
     """
 
     _N_BUCKET = 8   # cohort sizes are padded to a multiple of this with
@@ -67,7 +144,8 @@ class FeelServer:
                  adaptive_omega: bool = False, lie_boost: float = 0.0,
                  watch_class: Optional[int] = None, model_poison=None,
                  engine: str = "vectorized", batch_size: int = 50,
-                 pad_to: Optional[int] = None):
+                 pad_to: Optional[int] = None, n_buckets: int = 3,
+                 cohort_data: Optional[CohortData] = None):
         assert engine in ("vectorized", "loop"), engine
         self.cfg = cfg
         self.clients = clients
@@ -82,6 +160,7 @@ class FeelServer:
         self.engine = engine
         self.batch_size = batch_size
         self.pad_to = pad_to        # stable cohort shape across seeds
+        self.n_buckets = n_buckets
 
         self.wireless = WirelessModel(cfg, rng)
         self.reputation = ReputationTracker(cfg)
@@ -103,11 +182,10 @@ class FeelServer:
         self._test_mask_arr = np.stack(self._test_masks).astype(np.float32)
         self._tx = jax.numpy.asarray(test.x)
         self._ty = jax.numpy.asarray(test.y)
-        # vectorized-engine state, built on first use: device-resident
-        # padded client arrays / per-UE eval masks and the true sizes
-        self._pd_dev = None
-        self._mask_dev = None
-        self._pd_sizes: Optional[np.ndarray] = None
+        # vectorized-engine client layout: injected (sweep-shared) or built
+        # lazily on first use (see CohortData)
+        self._cohort_data = cohort_data
+        self.pad_waste: List[float] = []   # per-round padded/real sample ratio
         self.logs: List[RoundLog] = []
 
     # ------------------------------------------------------------------ #
@@ -133,7 +211,9 @@ class FeelServer:
         if self.policy == "max_count":
             return max_count_schedule(values, costs, cfg)
         if self.policy == "top_value":
-            return top_value_schedule(values, cfg, cfg.min_selected)
+            # selection ignores the channel, but the logged Schedule.cost
+            # must report the real Eq. 9 costs (accounting bugfix)
+            return top_value_schedule(values, costs, cfg, cfg.min_selected)
         raise KeyError(self.policy)
 
     # ------------------------------------------------------------------ #
@@ -163,44 +243,62 @@ class FeelServer:
                              [r.n_samples for r in reports])
         return acc_local, acc_test
 
-    def _run_cohort_vectorized(self, sel: np.ndarray) -> Tuple[np.ndarray,
-                                                               np.ndarray]:
-        cfg = self.cfg
-        if self._pd_dev is None:
-            pd = pad_clients(self.clients, multiple_of=self.batch_size,
-                             pad_to=self.pad_to)
-            # loop-engine parity contract: the loop's mlp_sgd_epoch DROPS a
-            # tail batch (nb = n // batch_size) while the masked engine
-            # would train it, so a non-dividing batch_size must fail loudly
-            assert not np.any(pd.sizes % self.batch_size), (
-                "vectorized engine requires batch_size to divide every "
-                "client dataset size (the loop oracle drops tail batches)")
-            # resident on device once (with one extra all-zero "null client"
-            # row at index K); per-round cohort stacking is then a
-            # device-side gather instead of a host copy + transfer. Only
-            # the device copy is kept — the host copy would double the
-            # padded dataset's footprint for the server's lifetime.
-            zrow = lambda a: np.concatenate([a, np.zeros_like(a[:1])])
-            self._pd_dev = tuple(jax.numpy.asarray(zrow(a))
-                                 for a in (pd.x, pd.y, pd.mask))
-            self._mask_dev = jax.numpy.asarray(zrow(self._test_mask_arr))
-            self._pd_sizes = pd.sizes
-        n = sel.size
-        # bucket the cohort size to a multiple of 8 by padding with the
-        # null client (mask all-zero -> training no-op, weight 0 below), so
-        # rounds with new cohort sizes reuse the compiled step instead of
-        # re-tracing — the exact pathology this engine replaces
-        n_pad = -(-n // self._N_BUCKET) * self._N_BUCKET
-        idx_np = np.concatenate(
-            [sel, np.full(n_pad - n, len(self.clients), sel.dtype)])
-        idx = jax.numpy.asarray(idx_np)
-        xs = jax.numpy.take(self._pd_dev[0], idx, axis=0)
-        ys = jax.numpy.take(self._pd_dev[1], idx, axis=0)
-        ms = jax.numpy.take(self._pd_dev[2], idx, axis=0)
-        stacked, acc = cohort.cohort_train(self.params, xs, ys, ms, self.lr,
-                                           cfg.local_epochs, self.batch_size)
-        acc_local = np.asarray(acc, float)[:n]
+    def _ensure_cohort_data(self) -> CohortData:
+        # resident on device once; per-round cohort stacking is then a
+        # device-side gather instead of a host copy + transfer. Only the
+        # device copy is kept — a host copy would double the padded
+        # dataset's footprint for the server's lifetime.
+        if self._cohort_data is None:
+            self._cohort_data = build_cohort_data(
+                self.clients, self._test_mask_arr,
+                batch_size=self.batch_size, pad_to=self.pad_to,
+                n_buckets=self.n_buckets)
+        return self._cohort_data
 
+    def _cohort_parts(self, sel: np.ndarray, pad: bool = True):
+        """Split the round's cohort per size bucket.
+
+        Yields ``(bucket, positions_in_sel, row_ids)``. With ``pad`` the
+        row ids are padded to a multiple of _N_BUCKET with the bucket's
+        null client (mask all-zero -> training no-op, weight 0 downstream),
+        so rounds with new cohort sizes reuse the compiled per-bucket step
+        instead of re-tracing — the exact pathology this engine replaces.
+        The sweep runner passes ``pad=False`` and pads the cross-run batch
+        once instead.
+        """
+        cd = self._ensure_cohort_data()
+        for b, bkt in enumerate(cd.buckets):
+            pos = np.flatnonzero(cd.bucket_of[sel] == b)
+            if pos.size == 0:
+                continue
+            rows = cd.row_of[sel[pos]]
+            if pad:
+                n_pad = cohort.pad_count(pos.size, self._N_BUCKET)
+                rows = np.concatenate(
+                    [rows, np.full(n_pad - pos.size, bkt["null"],
+                                   rows.dtype)])
+            yield bkt, pos, rows
+
+    def _gather_bucket(self, bkt: Dict, rows: np.ndarray):
+        """Device-side gather of a bucket's (x, y, mask) cohort rows."""
+        idx = jnp.asarray(rows)
+        return (jnp.take(bkt["x"], idx, axis=0),
+                jnp.take(bkt["y"], idx, axis=0),
+                jnp.take(bkt["mask"], idx, axis=0))
+
+    @staticmethod
+    def _merge_cohort(parts):
+        """Merge per-bucket results (pos, stacked_real_rows, acc_real) back
+        into selection order: FedAvg then accumulates in exactly the order
+        the loop oracle uses (bit-for-bit parity)."""
+        order = np.concatenate([p[0] for p in parts])
+        inv = np.argsort(order, kind="stable")
+        stacked = cohort.merge_stacks([p[1] for p in parts], inv)
+        acc_local = np.concatenate([p[2] for p in parts])[inv]
+        return stacked, acc_local
+
+    def _apply_attacks(self, sel, stacked, acc_local):
+        """Model poisoning + dishonest reporting on the merged stack."""
         mal = np.array([self.clients[k].malicious for k in sel])
         if self.model_poison is not None and mal.any():
             # same contract as the loop path: model_poison.apply() per
@@ -213,51 +311,97 @@ class FeelServer:
         if self.lie_boost:
             acc_local = np.where(
                 mal, np.minimum(acc_local + self.lie_boost, 1.0), acc_local)
+        return stacked, acc_local
 
-        masks = jax.numpy.take(self._mask_dev, idx, axis=0)
+    def _eval_masks(self, sel: np.ndarray, n_pad: int) -> jax.Array:
+        """(n_pad, T) per-UE eval masks for the padded merged stack."""
+        cd = self._ensure_cohort_data()
+        idx = jnp.asarray(np.concatenate(
+            [sel, np.full(n_pad - sel.size, len(self.clients), sel.dtype)]))
+        return jnp.take(cd.mask_dev, idx, axis=0)
+
+    def _aggregate_cohort(self, sel: np.ndarray, stacked_p) -> None:
+        """ONE fedavg_stacked call whose weights span all buckets."""
+        cd = self._ensure_cohort_data()
+        weights = np.zeros(jax.tree.leaves(stacked_p)[0].shape[0])
+        weights[:sel.size] = cd.sizes[sel]
+        self.params = fedavg_stacked(stacked_p, weights)
+
+    def _run_cohort_vectorized(self, sel: np.ndarray) -> Tuple[np.ndarray,
+                                                               np.ndarray]:
+        cfg = self.cfg
+        cd = self._ensure_cohort_data()
+        n = sel.size
+        parts, pad_slots = [], 0
+        for bkt, pos, rows in self._cohort_parts(sel):
+            xs, ys, ms = self._gather_bucket(bkt, rows)
+            stacked_b, acc_b = cohort.cohort_train(
+                self.params, xs, ys, ms, self.lr, cfg.local_epochs,
+                self.batch_size)
+            parts.append((pos,
+                          jax.tree.map(lambda l, m=pos.size: l[:m],
+                                       stacked_b),
+                          np.asarray(acc_b, float)[:pos.size]))
+            pad_slots += rows.size * bkt["level"]
+        stacked, acc_local = self._merge_cohort(parts)
+        self.pad_waste.append(
+            float(pad_slots) / max(float(cd.sizes[sel].sum()), 1.0))
+
+        stacked, acc_local = self._apply_attacks(sel, stacked, acc_local)
+
+        # evaluate + aggregate once on the merged stack, zero-padded to a
+        # stable row count (null rows score 0 under an all-zero mask and
+        # contribute exactly 0 with weight 0)
+        n_pad = cohort.pad_count(n, self._N_BUCKET)
+        stacked_p = cohort.pad_stacked(stacked, n_pad)
         acc_test = np.asarray(
-            cohort.cohort_eval(stacked, self._tx, self._ty, masks),
-            float)[:n]
-
-        weights = np.zeros(n_pad)
-        weights[:n] = self._pd_sizes[sel]
-        self.params = fedavg_stacked(stacked, weights)
+            cohort.cohort_eval(stacked_p, self._tx, self._ty,
+                               self._eval_masks(sel, n_pad)), float)[:n]
+        self._aggregate_cohort(sel, stacked_p)
         return acc_local, acc_test
 
     # ------------------------------------------------------------------ #
-    def run_round(self, t: int) -> RoundLog:
-        cfg = self.cfg
+    # Round phases. ``run_round`` composes them; the batched sweep runner
+    # (federated/simulation.py) interleaves the phases of many runs so
+    # training/evaluation batch across runs.
+    # ------------------------------------------------------------------ #
+    def _schedule_round(self, t: int):
+        """Alg. 1 lines 4-8: values -> schedule -> participant set.
+
+        Returns (values, sched, sel, forced). ``forced`` marks a degenerate
+        channel draw: no UE met the deadline, so the server forces the
+        single highest-value UE to keep training alive — but problem (8)
+        had no feasible point, so the round's *objective* is 0.0 (the
+        forced UE's V_k is not credited to the scheduler).
+        """
         values = self._values(t)
         sched = self._schedule(values)
         sel = sched.selected
+        forced = False
         if sel.size == 0:
-            # Degenerate channel draw: no UE meets the deadline, so the
-            # server forces the single highest-value UE. Rewrite the
-            # schedule so the logged objective / selection vector describe
+            # Rewrite the schedule so the logged selection vector describes
             # the actual participant set, not the empty one.
             k = int(np.argmax(values))
             sel = np.array([k])
-            x = np.zeros(cfg.n_ues, bool)
+            x = np.zeros(self.cfg.n_ues, bool)
             x[k] = True
-            alpha = np.zeros(cfg.n_ues)
+            alpha = np.zeros(self.cfg.n_ues)
             alpha[k] = 1.0          # the forced UE gets the whole band
             sched = Schedule(x=x, alpha=alpha, cost=sched.cost,
                              value=sched.value)
+            forced = True
+        return values, sched, sel, forced
 
+    def _train_cohort(self, sel: np.ndarray) -> Tuple[np.ndarray,
+                                                      np.ndarray]:
         if self.engine == "vectorized":
-            acc_local, acc_test = self._run_cohort_vectorized(sel)
-        else:
-            acc_local, acc_test = self._run_cohort_loop(sel)
-        self.reputation.update(sel, acc_local, acc_test)
+            return self._run_cohort_vectorized(sel)
+        return self._run_cohort_loop(sel)
 
-        g_acc = float(mlp_accuracy(self.params, self._tx, self._ty))
-        src_acc = float("nan")
-        if self.watch_class is not None:
-            m = self.test.y == self.watch_class
-            if m.any():
-                src_acc = float(mlp_accuracy(
-                    self.params, jax.numpy.asarray(self.test.x[m]),
-                    jax.numpy.asarray(self.test.y[m])))
+    def _finalize_round(self, t: int, values, sched, sel, forced,
+                        acc_local, acc_test, g_acc, src_acc) -> RoundLog:
+        """Alg. 1 lines 15-16 + logging: reputation, staleness, RoundLog."""
+        self.reputation.update(sel, acc_local, acc_test)
 
         # ages: selected reset, others grow (staleness metric of Eq. 2)
         self.ages += 1.0
@@ -266,10 +410,31 @@ class FeelServer:
         log = RoundLog(
             round=t, selected=sel, global_acc=g_acc,
             n_malicious_selected=sum(self.clients[k].malicious for k in sel),
-            objective=sched.objective(), values=values.copy(),
-            reputations=self.reputation.values.copy(), source_acc=src_acc)
+            objective=0.0 if forced else sched.objective(),
+            values=values.copy(),
+            reputations=self.reputation.values.copy(), source_acc=src_acc,
+            forced=forced)
         self.logs.append(log)
         return log
+
+    def _global_metrics(self) -> Tuple[float, float]:
+        """(global test accuracy, watch-class accuracy) of current params."""
+        g_acc = float(mlp_accuracy(self.params, self._tx, self._ty))
+        src_acc = float("nan")
+        if self.watch_class is not None:
+            m = self.test.y == self.watch_class
+            if m.any():
+                src_acc = float(mlp_accuracy(
+                    self.params, jax.numpy.asarray(self.test.x[m]),
+                    jax.numpy.asarray(self.test.y[m])))
+        return g_acc, src_acc
+
+    def run_round(self, t: int) -> RoundLog:
+        values, sched, sel, forced = self._schedule_round(t)
+        acc_local, acc_test = self._train_cohort(sel)
+        g_acc, src_acc = self._global_metrics()
+        return self._finalize_round(t, values, sched, sel, forced,
+                                    acc_local, acc_test, g_acc, src_acc)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         for t in range(rounds or self.cfg.rounds):

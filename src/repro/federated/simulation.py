@@ -1,6 +1,7 @@
 """End-to-end FEEL experiment driver — reproduces the paper's §V protocol.
 
-    run_experiment(...) -> accuracy curve per round
+    run_experiment(...) -> accuracy curve per round (one run)
+    run_sweep(...)      -> tidy per-(policy, seed, round) table (many runs)
 
 Protocol (paper §V-A): synthetic-MNIST 50k/10k; sort-by-label groups of 50;
 1-30 groups per UE; K=50 UEs, 5 random malicious with a label-flip attack
@@ -10,19 +11,32 @@ averaged over independent runs.
 ``engine`` selects the cohort execution path: "vectorized" (default) runs
 every scheduled UE in one vmapped step; "loop" is the original sequential
 per-client oracle (see federated/server.py).
+
+``run_sweep`` is the recommended entry point for multi-seed studies
+(§V averages, robustness sweeps): it generates each seed's dataset once,
+shares each (seed, attack-pair) partition and its device-resident padded
+layout across policies, and — where shapes allow (same cfg => same padded
+bucket levels) — stacks the per-round cohorts of ALL runs into one
+``cohort_train_multi``/``cohort_eval`` call per size bucket, so seeds and
+policies become one more slice of the vmapped client axis. Every run
+reproduces its sequential ``run_experiment`` twin exactly (same RNG
+streams; tests/test_sweep.py pins the parity).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
 from repro.core.poisoning import LabelFlipAttack, pick_malicious
-from repro.data.partition import partition
-from repro.data.synthetic_mnist import generate
-from repro.federated.server import FeelServer
+from repro.data.partition import label_histogram, partition
+from repro.data.synthetic_mnist import N_CLASSES, generate
+from repro.federated import cohort
+from repro.federated.server import FeelServer, build_cohort_data
 
 
 def run_experiment(policy: str = "dqs",
@@ -70,13 +84,349 @@ def run_experiment(policy: str = "dqs",
     }
 
 
+# ---------------------------------------------------------------------- #
+# Batched multi-run sweeps
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SweepResult:
+    """Tidy results of a (policies x seeds x attack_pairs) sweep.
+
+    rows — one record per (policy, seed, attack_pair, round) with the
+        per-round metrics (acc, source_acc, malicious_selected, objective,
+        forced).
+    runs — one record per run, shaped exactly like ``run_experiment``'s
+        return value plus the (policy, seed, attack_pair) key.
+    """
+    rows: List[Dict]
+    runs: List[Dict]
+
+    def select(self, **key) -> List[Dict]:
+        """Run summaries matching e.g. policy=..., seed=..., attack_pair=..."""
+        return [r for r in self.runs
+                if all(r[k] == v for k, v in key.items())]
+
+    def mean_curve(self, field: str = "acc", **key) -> np.ndarray:
+        """Per-round mean of ``field`` over the runs matching ``key``
+        (the paper's average-over-independent-runs reduction)."""
+        runs = self.select(**key)
+        assert runs, key
+        return np.mean([r[field] for r in runs], axis=0)
+
+
+class _SweepRun:
+    """One (policy, seed, attack_pair) run's server + in-flight round state."""
+
+    def __init__(self, policy, seed, pair, server, malicious, watch_mask):
+        self.policy = policy
+        self.seed = seed
+        self.pair = pair
+        self.server = server
+        self.malicious = malicious
+        self.watch_mask = watch_mask       # (T,) float32, source-class rows
+        self.plan = None                   # (values, sched, sel, forced)
+        self.stacked = None                # merged cohort params (sel order)
+        self.acc_local = None
+        self.acc_test = None
+        self.g_acc = float("nan")
+        self.src_acc = float("nan")
+
+    def summary(self) -> Dict:
+        s = self.server
+        return {
+            "policy": self.policy, "seed": self.seed,
+            "attack_pair": self.pair,
+            "acc": [l.global_acc for l in s.logs],
+            "source_acc": [l.source_acc for l in s.logs],
+            "malicious_selected": [l.n_malicious_selected for l in s.logs],
+            "objective": [l.objective for l in s.logs],
+            "forced": [l.forced for l in s.logs],
+            "final_reputation_malicious": float(
+                np.mean(s.reputation.values[self.malicious])),
+            "final_reputation_honest": float(np.mean(np.delete(
+                s.reputation.values, self.malicious))),
+            "malicious": self.malicious.tolist(),
+        }
+
+
+def run_sweep(policies: Sequence[str], seeds: Sequence[int],
+              attack_pairs: Sequence[Tuple[int, int]] = ((6, 2),),
+              cfg: Optional[FeelConfig] = None, *,
+              n_train: int = 50_000, n_test: int = 10_000,
+              omega: Optional[Tuple[float, float]] = None,
+              adaptive_omega: bool = False,
+              rounds: Optional[int] = None,
+              no_attack: bool = False,
+              model_poison_scale: Optional[float] = None,
+              lie_boost: float = 0.0,
+              engine: str = "vectorized",
+              n_buckets: int = 3,
+              stack_runs: bool = True) -> SweepResult:
+    """Run the full (policies x seeds x attack_pairs) grid batched.
+
+    Semantics: every run is exactly ``run_experiment(policy, pair,
+    seed=seed, ...)`` — same datasets, partitions and RNG streams — but the
+    sweep (1) generates each seed's dataset once, (2) builds each
+    (seed, attack-pair) partition and its device-resident padded bucket
+    layout once, shared across policies, and (3) with ``stack_runs`` and
+    the vectorized engine, trains/evaluates the per-round cohorts of ALL
+    runs in one vmapped call per size bucket: a shared ``pad_to`` makes the
+    bucket levels identical across runs, so runs become one more slice of
+    the stacked client axis (``cohort.cohort_train_multi``).
+
+    ``stack_runs=False`` (or engine="loop") executes the runs sequentially
+    while still sharing the dataset/partition caches — the oracle the
+    batched path is tested against.
+    """
+    cfg = cfg or FeelConfig()
+    if omega is not None:
+        cfg = dataclasses.replace(cfg, omega_rep=omega[0],
+                                  omega_div=omega[1])
+    policies = list(policies)
+    seeds = [int(s) for s in seeds]
+    attack_pairs = [tuple(p) for p in attack_pairs]
+
+    # -- shared caches ------------------------------------------------- #
+    data_cache = {s: generate(n_train, n_test, seed=s) for s in set(seeds)}
+
+    def _attack_key(pair):
+        # partitions are identical across attack pairs when labels are not
+        # flipped (no_attack / model-poison runs)
+        if no_attack:
+            return "none"
+        if model_poison_scale is not None:
+            return "mal_only"
+        return pair
+
+    part_cache: Dict = {}
+    for seed in set(seeds):
+        for pair in attack_pairs:
+            key = (seed, _attack_key(pair))
+            if key in part_cache:
+                continue
+            train, test = data_cache[seed]
+            rng = np.random.default_rng(seed)
+            malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+            attack = None
+            if not no_attack and model_poison_scale is None:
+                attack = LabelFlipAttack(*pair)
+            clients = partition(train, cfg.n_ues, rng,
+                                None if no_attack else malicious, attack)
+            # freeze the post-partition RNG state: each run restores it so
+            # its downstream stream (wireless placement, channel draws)
+            # matches its sequential run_experiment twin exactly
+            part_cache[key] = (clients, malicious, rng.bit_generator.state)
+
+    # one pad_to across the whole sweep => identical bucket levels =>
+    # every compiled per-bucket program is shared by all runs
+    pad_to = max(c.size for clients, _, _ in part_cache.values()
+                 for c in clients)
+
+    cohort_cache: Dict = {}
+    if engine == "vectorized":
+        for (seed, akey), (clients, _, _) in part_cache.items():
+            _, test = data_cache[seed]
+            hists = [label_histogram(c.data, N_CLASSES) for c in clients]
+            mask_arr = np.stack(
+                [np.isin(test.y, np.flatnonzero(h > 0))
+                 for h in hists]).astype(np.float32)
+            cohort_cache[(seed, akey)] = build_cohort_data(
+                clients, mask_arr, pad_to=pad_to, n_buckets=n_buckets)
+
+    mp = None
+    if model_poison_scale is not None and not no_attack:
+        from repro.core.poisoning import ModelPoisonAttack
+        mp = ModelPoisonAttack(scale=model_poison_scale)
+
+    runs: List[_SweepRun] = []
+    for pair in attack_pairs:
+        for seed in seeds:
+            for policy in policies:
+                clients, malicious, rng_state = \
+                    part_cache[(seed, _attack_key(pair))]
+                _, test = data_cache[seed]
+                rng = np.random.default_rng(seed)
+                rng.bit_generator.state = rng_state
+                server = FeelServer(
+                    cfg, clients, test, rng, policy=policy,
+                    adaptive_omega=adaptive_omega, watch_class=pair[0],
+                    model_poison=mp, lie_boost=lie_boost, engine=engine,
+                    pad_to=pad_to, n_buckets=n_buckets,
+                    cohort_data=cohort_cache.get((seed, _attack_key(pair))))
+                watch = (test.y == pair[0]).astype(np.float32)
+                runs.append(_SweepRun(policy, seed, pair, server,
+                                      malicious, watch))
+
+    n_rounds = rounds or cfg.rounds
+    if stack_runs and engine == "vectorized":
+        for t in range(n_rounds):
+            _sweep_round_stacked(runs, t)
+    else:
+        for run in runs:
+            for t in range(n_rounds):
+                run.server.run_round(t)
+
+    rows = [
+        {"policy": run.policy, "seed": run.seed, "attack_pair": run.pair,
+         "round": l.round, "acc": l.global_acc, "source_acc": l.source_acc,
+         "malicious_selected": l.n_malicious_selected,
+         "objective": l.objective, "forced": l.forced}
+        for run in runs for l in run.server.logs]
+    return SweepResult(rows=rows, runs=[r.summary() for r in runs])
+
+
+_PAD = FeelServer._N_BUCKET
+def _sweep_round_stacked(runs: List[_SweepRun], t: int) -> None:
+    """One round of every run, batched: schedule per run on the host, then
+    one ``cohort_train_multi`` per (shared client arrays, size bucket)
+    group, one ``cohort_eval`` per seed for the uploaded models, per-run
+    FedAvg, and one ``cohort_eval`` per seed for the global/source-class
+    metrics.
+
+    All device-side reshuffling uses gathers (``jnp.take``) whose compile
+    cache is keyed on *index shapes*, never value-dependent slicing — the
+    eager-op cache stays warm across rounds even though every round
+    selects different cohorts (value-keyed ``l[a:b]`` slicing recompiled a
+    mini-program per new offset pair and dominated sweep wall-clock).
+    """
+    lr = runs[0].server.lr
+    epochs = runs[0].server.cfg.local_epochs
+    batch_size = runs[0].server.batch_size
+    assert all(r.server.lr == lr and r.server.batch_size == batch_size
+               for r in runs)
+
+    # -- phase A: schedules (host-side numpy, per run) ------------------ #
+    for run in runs:
+        run.plan = run.server._schedule_round(t)
+
+    # -- phase B: train — one call per (client arrays, bucket) group ---- #
+    # (R, ...) stacked run parameters; each group's per-row params are one
+    # shape-stable gather from it
+    params_all = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[r.server.params for r in runs])
+    groups: Dict[int, Dict] = {}
+    for i, run in enumerate(runs):
+        sel = run.plan[2]
+        waste_slots = 0
+        for bkt, pos, rows in run.server._cohort_parts(sel, pad=False):
+            g = groups.setdefault(id(bkt), {"bkt": bkt, "parts": []})
+            g["parts"].append((i, pos, rows))
+            # report the same metric the single-run path reports (per-part
+            # padded slots); the cross-run group actually pads once for
+            # the whole group, so this is a (slight) upper bound
+            waste_slots += cohort.pad_count(pos.size, _PAD) * bkt["level"]
+        run.server.pad_waste.append(
+            waste_slots / max(float(
+                run.server._ensure_cohort_data().sizes[sel].sum()), 1.0))
+
+    stacks, acc_parts = [], []
+    row_map: Dict[int, List] = {i: [] for i in range(len(runs))}
+    g_off = 0            # row offset into the concatenated round stack
+    for g in groups.values():
+        bkt, parts = g["bkt"], g["parts"]
+        rows_cat = [rows for _, _, rows in parts]
+        ids_cat = [np.full(rows.size, i) for i, _, rows in parts]
+        off = 0
+        for i, pos, rows in parts:
+            row_map[i].append((pos, g_off + off + np.arange(rows.size)))
+            off += rows.size
+        n_pad = cohort.pad_count(off, _PAD)
+        rows_cat.append(np.full(n_pad - off, bkt["null"]))
+        ids_cat.append(np.zeros(n_pad - off, int))   # null rows: any params
+        idx = jnp.asarray(np.concatenate(rows_cat))
+        p = jax.tree.map(
+            lambda l, r=jnp.asarray(np.concatenate(ids_cat)):
+                jnp.take(l, r, axis=0), params_all)
+        stacked_g, acc_g = cohort.cohort_train_multi(
+            p, jnp.take(bkt["x"], idx, axis=0),
+            jnp.take(bkt["y"], idx, axis=0),
+            jnp.take(bkt["mask"], idx, axis=0), lr, epochs, batch_size)
+        stacks.append(stacked_g)
+        acc_parts.append(acc_g)
+        g_off += n_pad
+
+    big = cohort.merge_stacks(stacks)        # (g_off, ...) round stack
+    acc_all = np.asarray(jnp.concatenate(acc_parts), float)  # one sync
+    for i, run in enumerate(runs):
+        order = np.concatenate([pos for pos, _ in row_map[i]])
+        gidx = np.concatenate([g for _, g in row_map[i]])
+        inv = np.argsort(order, kind="stable")
+        stacked = jax.tree.map(
+            lambda l, r=jnp.asarray(gidx[inv]): jnp.take(l, r, axis=0),
+            big)
+        run.stacked, run.acc_local = run.server._apply_attacks(
+            run.plan[2], stacked, acc_all[gidx][inv])
+
+    # -- phase C: evaluate uploads — one call per seed ------------------ #
+    for group in _by_seed(runs):
+        stacks = [run.stacked for run in group]
+        masks = [run.server._eval_masks(run.plan[2], run.plan[2].size)
+                 for run in group]
+        counts = [run.plan[2].size for run in group]
+        accs = _eval_stacked(group[0].server, stacks, masks, counts)
+        for run, a in zip(group, accs):
+            run.acc_test = a
+
+    # -- phase D: per-run FedAvg (weights span the run's buckets) ------- #
+    for run in runs:
+        sel = run.plan[2]
+        stacked_p = cohort.pad_stacked(run.stacked,
+                                       cohort.pad_count(sel.size, _PAD))
+        run.server._aggregate_cohort(sel, stacked_p)
+
+    # -- phase E: global + source-class accuracy — one call per seed ---- #
+    for group in _by_seed(runs):
+        ty = group[0].server._ty
+        ones = jnp.ones_like(ty, jnp.float32)
+        stacks = [cohort.broadcast_params(run.server.params, 2)
+                  for run in group]
+        masks = [jnp.stack([ones, jnp.asarray(run.watch_mask)])
+                 for run in group]
+        accs = _eval_stacked(group[0].server, stacks, masks,
+                             [2] * len(group))
+        for run, a in zip(group, accs):
+            run.g_acc = float(a[0])
+            run.src_acc = float(a[1]) if run.watch_mask.any() else \
+                float("nan")
+
+    # -- phase F: reputation / staleness / logs (host-side, per run) ---- #
+    for run in runs:
+        values, sched, sel, forced = run.plan
+        run.server._finalize_round(t, values, sched, sel, forced,
+                                   run.acc_local, run.acc_test,
+                                   run.g_acc, run.src_acc)
+        run.plan = run.stacked = run.acc_local = run.acc_test = None
+
+
+def _by_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:
+    groups: Dict[int, List[_SweepRun]] = {}
+    for run in runs:
+        groups.setdefault(run.seed, []).append(run)
+    return list(groups.values())
+
+
+def _eval_stacked(server, stacks, masks, counts) -> List[np.ndarray]:
+    """One cohort_eval over the concatenated per-run stacks; split back."""
+    n_tot = sum(counts)
+    n_pad = cohort.pad_count(n_tot, _PAD)
+    stacked = cohort.pad_stacked(cohort.merge_stacks(stacks), n_pad)
+    mask = cohort.pad_stacked(cohort.merge_stacks(masks), n_pad)
+    acc = np.asarray(
+        cohort.cohort_eval(stacked, server._tx, server._ty, mask), float)
+    out, off = [], 0
+    for c in counts:
+        out.append(acc[off:off + c])
+        off += c
+    return out
+
+
 def averaged(policy, attack_pair, n_runs=3, **kw) -> Dict:
-    """Paper reports the average of independent runs per setting."""
-    runs = [run_experiment(policy, attack_pair, seed=s, **kw)
-            for s in range(n_runs)]
-    acc = np.mean([r["acc"] for r in runs], axis=0)
-    mal = np.mean([r["malicious_selected"] for r in runs], axis=0)
-    return {"acc": acc.tolist(), "malicious_selected": mal.tolist(),
+    """Paper reports the average of independent runs per setting —
+    executed as one batched ``run_sweep`` over the seeds."""
+    res = run_sweep([policy], seeds=range(n_runs),
+                    attack_pairs=[attack_pair], **kw)
+    return {"acc": res.mean_curve("acc").tolist(),
+            "malicious_selected":
+                res.mean_curve("malicious_selected").tolist(),
             "rep_gap": float(np.mean([r["final_reputation_honest"]
                                       - r["final_reputation_malicious"]
-                                      for r in runs]))}
+                                      for r in res.runs]))}

@@ -1,40 +1,100 @@
 """Degrade gracefully when ``hypothesis`` is not installed (offline
-container): property tests skip individually instead of erroring the whole
-module at collection time.
+container): property tests run against a seeded random-example fallback
+instead of skipping.
 
 Test modules import the hypothesis API from here::
 
     from hypothesis_compat import given, settings, st
 
-With hypothesis installed this is a plain re-export. Without it, ``st.*``
-strategy constructors become inert stubs and ``@given(...)`` replaces the
-test with a zero-argument function that calls ``pytest.skip`` — so the
-plain (non-property) tests in the same module still run.
+With hypothesis installed (``pip install -e .[test]``) this is a plain
+re-export — shrinking, the example database and the full strategy
+vocabulary all work. Without it, a miniature implementation of the
+strategies this repo actually uses (``integers``, ``floats``, ``lists``,
+``sampled_from``) draws ``max_examples`` pseudo-random examples from a
+fixed per-test seed, so the property tests still execute deterministically
+and regressions fail loudly rather than silently skipping. Unsupported
+strategy names raise at collection time — add them to _FallbackStrategies
+when a new test needs them.
 """
-import pytest
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
+    import numpy as np
 
-    class _StrategyStub:
-        """Any ``st.<name>(...)`` call returns an inert placeholder."""
+    _MAX_EXAMPLES = 20       # fallback default; @settings overrides
+
+    class _Strategy:
+        """A draw rule: ``example(rng)`` produces one value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _FallbackStrategies:
+        """The subset of ``hypothesis.strategies`` this repo uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
 
         def __getattr__(self, name):
-            return lambda *args, **kwargs: None
+            raise AttributeError(
+                f"hypothesis fallback: strategy st.{name} not implemented "
+                "(tests/hypothesis_compat.py) — install hypothesis or add "
+                "it to _FallbackStrategies")
 
-    st = _StrategyStub()
+    st = _FallbackStrategies()
 
-    def settings(*args, **kwargs):
-        return lambda f: f
-
-    def given(*args, **kwargs):
+    def settings(max_examples=_MAX_EXAMPLES, **kwargs):
         def deco(f):
-            def _skipped():
-                pytest.skip("hypothesis not installed")
-            _skipped.__name__ = f.__name__
-            _skipped.__doc__ = f.__doc__
-            return _skipped
+            f._fallback_max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strategies):
+        for s in strategies:
+            assert isinstance(s, _Strategy), (
+                "hypothesis fallback supports positional strategies only")
+
+        def deco(f):
+            def _property_test():
+                n = getattr(f, "_fallback_max_examples", _MAX_EXAMPLES)
+                # deterministic per-test stream: same examples every run
+                rng = np.random.default_rng(
+                    zlib.crc32(f.__qualname__.encode()))
+                for i in range(n):
+                    args = tuple(s.example(rng) for s in strategies)
+                    try:
+                        f(*args)
+                    except Exception:
+                        print(f"falsifying example (fallback, #{i}): "
+                              f"{f.__name__}{args}")
+                        raise
+            _property_test.__name__ = f.__name__
+            _property_test.__doc__ = f.__doc__
+            return _property_test
         return deco

@@ -1,0 +1,30 @@
+"""Tier-1 gate for benchmarks/bench_round.py: the smoke mode runs a tiny
+instance of both benchmarks (bucketed vs single-pad engine, run_sweep vs
+sequential) with loud internal assertions — a bench regression (engine
+crash, padding-waste regression, sweep/sequential divergence) fails here
+instead of rotting silently until the next manual bench run."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_bench_round_smoke():
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_round", "--smoke"],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(ROOT, "src") + os.pathsep
+             + os.environ.get("PYTHONPATH", "")},
+        timeout=1200)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "smoke OK" in r.stderr
+    # CSV rows for both engines made it out
+    assert any(line.startswith("unbucketed,") for line in
+               r.stdout.splitlines())
+    assert any(line.startswith("vectorized,") for line in
+               r.stdout.splitlines())

@@ -105,6 +105,68 @@ def test_cohort_eval_matches_subset_eval():
 
 
 # ---------------------------------------------------------------------- #
+# Size-bucketed sub-cohorts: parity with the single-bucket path and the
+# padding-waste reclaim the ROADMAP item targets.
+# ---------------------------------------------------------------------- #
+def test_bucket_levels_quantized():
+    from repro.data.partition import assign_buckets, bucket_levels
+    levels = bucket_levels(1500, 3, multiple_of=50)
+    np.testing.assert_array_equal(levels, [500, 1000, 1500])
+    # quantized step: nearby maxima share the same level grid (compile
+    # cache stays warm across seeds)
+    np.testing.assert_array_equal(bucket_levels(1451, 3, 50), levels)
+    np.testing.assert_array_equal(
+        assign_buckets(np.array([50, 500, 501, 1000, 1500]), levels),
+        [0, 0, 1, 1, 2])
+
+
+def test_pad_clients_bucketed_layout():
+    from repro.data.partition import pad_clients_bucketed
+    train, _ = generate(4000, 100, seed=0)
+    rng = np.random.default_rng(0)
+    clients = partition(train, 8, rng)
+    buckets = pad_clients_bucketed(clients, n_buckets=3, multiple_of=50)
+    seen = np.concatenate([ids for ids, _ in buckets])
+    assert sorted(seen) == list(range(8))        # every client, exactly once
+    sizes = np.array([c.size for c in clients])
+    for ids, pd in buckets:
+        assert (pd.sizes == sizes[ids]).all()
+        assert pd.max_samples >= sizes[ids].max()
+        for j, k in enumerate(ids):
+            n = clients[k].size
+            np.testing.assert_array_equal(pd.x[j, :n], clients[k].data.x)
+            assert pd.mask[j, :n].all() and not pd.mask[j, n:].any()
+    # bucketed padding is never worse than the single global pad
+    total_bucketed = sum(len(ids) * pd.max_samples for ids, pd in buckets)
+    global_pad = pad_clients(clients, multiple_of=50)
+    assert total_bucketed <= 8 * global_pad.max_samples
+
+
+def test_bucketed_k500_parity_and_padding_waste():
+    """K=500 regression for the ROADMAP item: the bucketed engine must
+    reproduce the single-bucket vectorized accuracy curve while cutting
+    per-round padded-sample waste below 1.25x (single global pad wastes
+    ~1.5-2x after the partition pool truncates)."""
+    from repro.core.poisoning import pick_malicious
+    cfg = FeelConfig(n_ues=500, n_malicious=50, rounds=2)
+    train, test = generate(50_000, 400, seed=0)
+    rng = np.random.default_rng(0)
+    mal = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+    clients = partition(train, cfg.n_ues, rng, mal,
+                        LabelFlipAttack(*EASY_PAIR))
+    curves, wastes = {}, {}
+    for nb in (1, 3):
+        server = FeelServer(cfg, clients, test, np.random.default_rng(0),
+                            policy="dqs", n_buckets=nb)
+        server.run(2)
+        curves[nb] = [l.global_acc for l in server.logs]
+        wastes[nb] = np.mean(server.pad_waste)
+    np.testing.assert_allclose(curves[3], curves[1], atol=1e-5)
+    assert wastes[3] < 1.25, wastes
+    assert wastes[3] < wastes[1], wastes
+
+
+# ---------------------------------------------------------------------- #
 # Degenerate-schedule fallback (satellite): the log must describe the
 # forced participant set, not the empty schedule.
 # ---------------------------------------------------------------------- #
@@ -127,8 +189,11 @@ def test_degenerate_schedule_log_reflects_forced_participant(engine):
     assert log.selected.size == 1
     k = int(log.selected[0])
     assert k == int(np.argmax(log.values))
-    # the logged objective describes the actual (forced) participant set
-    assert log.objective == pytest.approx(float(log.values[k]))
+    # problem (8) had no feasible point: the round is marked forced and its
+    # objective is 0.0 — the forced UE's V_k is not credited (accounting
+    # regression: the seed reported objective = V_k for infeasible rounds)
+    assert log.forced
+    assert log.objective == 0.0
     # the forced UE really trained: the global model moved
     moved = any(np.abs(np.asarray(a) - b).max() > 0
                 for a, b in zip(jax.tree.leaves(server.params),
@@ -137,6 +202,27 @@ def test_degenerate_schedule_log_reflects_forced_participant(engine):
     # only the forced participant's reputation was touched
     np.testing.assert_array_equal(np.delete(log.reputations, k),
                                   np.delete(before, k))
+
+
+def test_impossible_deadline_forces_round_with_zero_objective():
+    """A deadline no UE can meet (Eq. 8b infeasible for every UE) makes the
+    wireless costs K+1 across the board; every round must come back forced
+    with objective 0.0, and a normal deadline must not set the flag."""
+    train, test = generate(800, 150, seed=3)
+    rng = np.random.default_rng(3)
+    cfg = FeelConfig(n_ues=4, n_malicious=0, rounds=2, deadline_s=1e-9)
+    clients = partition(train, cfg.n_ues, rng)
+    server = FeelServer(cfg, clients, test, rng)
+    logs = server.run()
+    assert all(l.forced for l in logs)
+    assert all(l.objective == 0.0 for l in logs)
+    assert all(l.selected.size == 1 for l in logs)
+
+    ok = FeelServer(dataclasses.replace(cfg, deadline_s=300.0), clients,
+                    test, np.random.default_rng(3))
+    log = ok.run_round(0)
+    assert not log.forced
+    assert log.objective > 0.0
 
 
 # ---------------------------------------------------------------------- #

@@ -30,14 +30,15 @@ def test_dqs_respects_budget_and_feasibility(seed, k):
     assert not np.any(s.x[costs > k])
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_dqs_vs_bruteforce_small(seed):
-    """Greedy is feasible and close to the exact knapsack optimum."""
-    k = 8
+@given(st.integers(0, 2**31 - 1), st.integers(4, 10))
+@settings(max_examples=30, deadline=None)
+def test_dqs_vs_bruteforce_half_approximation(seed, k):
+    """Modified greedy (density pack, then best-single-UE fallback) is a
+    1/2-approximation of the exact knapsack optimum — the claim pinned in
+    the scheduler module docstring. Costs include infeasible (k+1) draws."""
     rng = np.random.default_rng(seed)
     values = rng.uniform(0.1, 1.0, k)
-    costs = rng.integers(1, k + 1, k)
+    costs = rng.integers(1, k + 2, k)
     g = dqs_schedule(values, costs, _cfg(k))
     b = brute_force_schedule(values, costs, _cfg(k))
     assert g.objective() <= b.objective() + 1e-9
@@ -45,14 +46,25 @@ def test_dqs_vs_bruteforce_small(seed):
 
 
 def test_dqs_prefers_value_density():
-    """The greedy order is V/c: a cheap high-value UE beats an expensive
-    slightly-higher-value one when the budget only fits one."""
-    k = 2
-    values = np.array([1.0, 1.1])
-    costs = np.array([1, 2])
-    cfg = FeelConfig(n_ues=2)
-    s = dqs_schedule(values, costs, cfg)
-    assert s.x[0] and not s.x[1]      # budget 2: picks c=1 first, 1 left < 2
+    """The greedy order is V/c: with the budget nearly full, the two dense
+    cheap UEs beat swapping one of them for the expensive third."""
+    values = np.array([1.0, 0.9, 0.85])
+    costs = np.array([1, 1, 2])
+    s = dqs_schedule(values, costs, FeelConfig(n_ues=3))
+    np.testing.assert_array_equal(s.x, [True, True, False])
+
+
+def test_dqs_single_item_fallback():
+    """Density-greedy alone picks the cheap low-value UE and blocks the
+    budget; the modified-greedy fallback must schedule the single
+    high-value UE instead (this is what makes the 1/2-approximation
+    bound of the module docstring hold)."""
+    values = np.array([0.5, 0.9])
+    costs = np.array([1, 2])          # densities 0.5 vs 0.45, budget 2
+    s = dqs_schedule(values, costs, _cfg(2))
+    assert not s.x[0] and s.x[1]
+    assert s.objective() == pytest.approx(0.9)
+    assert s.alpha[1] == pytest.approx(1.0)   # c=2 of K=2 fractions
 
 
 def test_all_policies_feasible():
@@ -83,7 +95,23 @@ def test_max_count_maximises_count():
 
 def test_top_value_selects_n():
     cfg = FeelConfig(n_ues=50, min_selected=5)
-    values = np.random.default_rng(2).uniform(0, 1, 50)
-    s = top_value_schedule(values, cfg, 5)
+    rng = np.random.default_rng(2)
+    values = rng.uniform(0, 1, 50)
+    costs = rng.integers(1, 52, 50)
+    s = top_value_schedule(values, costs, cfg, 5)
     assert s.x.sum() == 5
     assert set(s.selected) == set(np.argsort(-values)[:5])
+
+
+def test_top_value_logs_real_costs():
+    """Accounting regression: the seed fabricated ``costs = ones(K)`` so
+    every top_value round log misreported the wireless costs. Selection
+    still ignores the channel (UEs with infeasible cost K+1 stay eligible)
+    but Schedule.cost must be the actual Eq. 9 array."""
+    cfg = FeelConfig(n_ues=6, min_selected=2)
+    values = np.array([0.9, 0.8, 0.1, 0.2, 0.3, 0.4])
+    costs = np.array([7, 7, 1, 1, 1, 1])     # the two best are infeasible
+    s = top_value_schedule(values, costs, cfg, 2)
+    np.testing.assert_array_equal(s.cost, costs)
+    # no-wireless-constraint semantics: top-2 by value, despite cost K+1
+    assert set(s.selected) == {0, 1}

@@ -1,0 +1,96 @@
+"""Batched multi-run sweep (run_sweep) vs the sequential run_experiment
+oracle, plus the tidy-table / averaged() API contracts."""
+import numpy as np
+import pytest
+
+from repro.core.poisoning import EASY_PAIR
+from repro.federated.simulation import (SweepResult, averaged,
+                                        run_experiment, run_sweep)
+
+KW = dict(n_train=3000, n_test=400, rounds=4)
+
+
+@pytest.fixture(scope="module")
+def sweep() -> SweepResult:
+    return run_sweep(["dqs", "random"], seeds=[0, 1],
+                     attack_pairs=[EASY_PAIR], **KW)
+
+
+def test_sweep_matches_sequential_run_experiment(sweep):
+    """Every run of the stacked sweep must reproduce its sequential
+    ``run_experiment`` twin: same RNG streams, same schedules, same
+    accuracy curves. Global accuracy matches to float32 exactness;
+    source_acc is a masked-sum instead of a subset-mean, so it is equal
+    to ~1 ulp."""
+    for run in sweep.runs:
+        ref = run_experiment(run["policy"], run["attack_pair"],
+                             seed=run["seed"], **KW)
+        np.testing.assert_allclose(run["acc"], ref["acc"], atol=1e-7)
+        np.testing.assert_allclose(run["source_acc"], ref["source_acc"],
+                                   atol=1e-6)
+        assert run["malicious_selected"] == ref["malicious_selected"]
+        np.testing.assert_allclose(run["objective"], ref["objective"],
+                                   atol=1e-9)
+        assert run["malicious"] == ref["malicious"]
+        np.testing.assert_allclose(
+            run["final_reputation_honest"], ref["final_reputation_honest"],
+            atol=1e-7)
+        np.testing.assert_allclose(
+            run["final_reputation_malicious"],
+            ref["final_reputation_malicious"], atol=1e-7)
+
+
+def test_stacked_matches_unstacked_sweep(sweep):
+    """stack_runs=False (sequential execution, shared caches) is the
+    oracle for the cross-run stacked path."""
+    seq = run_sweep(["dqs", "random"], seeds=[0, 1],
+                    attack_pairs=[EASY_PAIR], stack_runs=False, **KW)
+    assert len(seq.runs) == len(sweep.runs)
+    for a, b in zip(sweep.runs, seq.runs):
+        assert (a["policy"], a["seed"]) == (b["policy"], b["seed"])
+        np.testing.assert_allclose(a["acc"], b["acc"], atol=1e-7)
+        assert a["malicious_selected"] == b["malicious_selected"]
+
+
+def test_sweep_tidy_table(sweep):
+    """rows is one record per (policy, seed, round) with the per-round
+    metrics; mean_curve reduces over seeds."""
+    assert len(sweep.rows) == 2 * 2 * KW["rounds"]
+    r0 = sweep.rows[0]
+    for field in ("policy", "seed", "attack_pair", "round", "acc",
+                  "source_acc", "malicious_selected", "objective",
+                  "forced"):
+        assert field in r0, field
+    curve = sweep.mean_curve("acc", policy="dqs")
+    assert curve.shape == (KW["rounds"],)
+    manual = np.mean([r["acc"] for r in sweep.runs
+                      if r["policy"] == "dqs"], axis=0)
+    np.testing.assert_allclose(curve, manual)
+    assert len(sweep.select(policy="random", seed=1)) == 1
+
+
+def test_partition_shared_across_policies(sweep):
+    """Policies of the same (seed, attack pair) must see the same
+    partition: identical malicious sets."""
+    by_seed = {}
+    for run in sweep.runs:
+        by_seed.setdefault(run["seed"], []).append(run["malicious"])
+    for mal_lists in by_seed.values():
+        assert all(m == mal_lists[0] for m in mal_lists)
+
+
+def test_averaged_runs_on_sweep():
+    out = averaged("dqs", EASY_PAIR, n_runs=2, **KW)
+    assert len(out["acc"]) == KW["rounds"]
+    assert len(out["malicious_selected"]) == KW["rounds"]
+    assert np.isfinite(out["rep_gap"])
+
+
+def test_sweep_loop_engine_falls_back():
+    """engine='loop' executes sequentially but returns the same table."""
+    res = run_sweep(["dqs"], seeds=[0], attack_pairs=[EASY_PAIR],
+                    engine="loop", n_train=3000, n_test=200, rounds=2)
+    assert len(res.rows) == 2
+    ref = run_experiment("dqs", EASY_PAIR, seed=0, engine="loop",
+                         n_train=3000, n_test=200, rounds=2)
+    np.testing.assert_allclose(res.runs[0]["acc"], ref["acc"], atol=1e-7)
