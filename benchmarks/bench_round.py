@@ -5,6 +5,8 @@ cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
     PYTHONPATH=src python -m benchmarks.bench_round --ks 500 \
         --engines unbucketed vectorized         # single pad vs 3 size buckets
     PYTHONPATH=src python -m benchmarks.bench_round --sweep        # run_sweep
+    PYTHONPATH=src python -m benchmarks.bench_round --control \
+        --ks 50 500 2000                        # host vs batched control plane
     PYTHONPATH=src python -m benchmarks.bench_round --smoke        # CI gate
 
 Methodology — each (engine, K) measurement runs the §V unit of work in a
@@ -25,6 +27,13 @@ single global pad — the pre-bucketing baseline).
 ``--sweep`` instead measures a (policies x seeds) study end-to-end:
 batched ``run_sweep`` vs the same grid as sequential ``run_experiment``
 calls (each mode in a fresh subprocess).
+
+``--control`` measures the control plane alone — the per-round schedule
+phase (Eq. 2/3 values -> Eq. 9 costs -> policy selection) of a
+``--control-runs``-run sweep, host numpy per run vs ONE batched
+``core.control.schedule_runs`` call (steady state, jit warm) — at each
+``--ks``, asserts the two planes pick identical UEs, and writes the rows
+to ``results/BENCH_control.json`` (the control-plane perf trajectory).
 
 ``--smoke`` runs a tiny instance of both benchmarks with loud assertions
 (bucketed padding waste must not exceed the single-pad waste; curves must
@@ -98,6 +107,96 @@ assert all(np.isfinite(a).all() for a in map(np.asarray, accs))
 print(json.dumps({"s_total": el, "n_runs": len(accs)}))
 """
 
+_CONTROL_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.configs.base import FeelConfig
+from repro.core import control as ctl
+from repro.core.diversity import diversity_index
+from repro.core.quality import data_quality_value
+from repro.core.scheduler import (POLICIES, POLICY_IDS, Schedule,
+                                  greedy_pack, top_value_schedule)
+from repro.core.wireless import WirelessModel
+
+k, n_runs, rounds = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+cfg = FeelConfig(n_ues=k, n_malicious=max(k // 10, 1))
+rng = np.random.default_rng(0)
+policies = [list(POLICY_IDS)[i % len(POLICY_IDS)] for i in range(n_runs)]
+wms = [WirelessModel(cfg, np.random.default_rng(1000 + i))
+       for i in range(n_runs)]
+sizes = (rng.integers(1, 31, (n_runs, k)) * 50).astype(float)
+cpu = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, (n_runs, k))
+divs = rng.uniform(0.0, 0.9, (n_runs, k))
+r_min = np.stack([wms[i].min_rate(wms[i].train_time(sizes[i], cpu[i]))
+                  for i in range(n_runs)])
+state = ctl.ControlState(
+    policy_id=np.array([POLICY_IDS[p] for p in policies], np.int32),
+    sizes=sizes, divs=divs, r_min=r_min,
+    reputations=rng.uniform(0.0, 1.0, (n_runs, k)),
+    ages=np.ones((n_runs, k)), cfg=cfg)
+t_train = np.stack([wms[i].train_time(sizes[i], cpu[i])
+                    for i in range(n_runs)])
+omega = np.full(n_runs, cfg.omega_rep), np.full(n_runs, cfg.omega_div)
+
+def draw(round_seed):
+    g = np.stack([wms[i].rng.exponential(1.0, k) * wms[i].distances
+                  ** (-cfg.pathloss_exp) for i in range(n_runs)])
+    rr = np.stack([np.argsort(np.random.default_rng((round_seed, i))
+                              .permutation(k)) for i in range(n_runs)])
+    return g, rr
+
+def host_round(gains, rr, cost_fn="cost"):
+    xs = []
+    for i, p in enumerate(policies):
+        I = diversity_index(divs[i], sizes[i], state.ages[i], cfg.gamma)
+        values = data_quality_value(state.reputations[i], I, cfg)
+        costs = getattr(wms[i], cost_fn)(gains[i], t_train[i])
+        if p == "top_value":
+            s = top_value_schedule(values, costs, cfg, cfg.min_selected)
+        elif p == "random":
+            # consume the SAME shared permutation draw the batched plane
+            # gets (rr is the inverse permutation): identical work +
+            # decisions, so the parity gate covers all five policies
+            x, alpha = greedy_pack(np.argsort(rr[i]), costs, k)
+            s = Schedule(x=x, alpha=alpha, cost=costs, value=values)
+        elif p == "best_channel":
+            s = POLICIES[p](values, costs, cfg, gains[i])
+        else:
+            s = POLICIES[p](values, costs, cfg)
+        x = s.x.copy()
+        if not x.any():                       # forced-round rewrite
+            x[np.argmax(values)] = True
+        xs.append(x)
+    return np.stack(xs)
+
+def batched_round(gains, rr):
+    x, *_ = ctl.schedule_runs(state, gains, rr, omega[0], omega[1])
+    return x
+
+# parity gate (all five policies) — doubles as the jit warmup. host_scan
+# is the seed's control plane: per-run python + the dense (K, K) Eq. 9
+# rate matrix (cost_scan); host is the post-bisection per-run oracle.
+g0, rr0 = draw(0)
+xh, xb = host_round(g0, rr0), batched_round(g0, rr0)
+assert np.array_equal(xh, xb), "host/batched selection mismatch"
+assert np.array_equal(xh, host_round(g0, rr0, "cost_scan")), "scan mismatch"
+
+t_scan = t_host = t_batched = 0.0
+scan_rounds = max(1, rounds // 3)           # O(K^2): keep its share small
+for t in range(scan_rounds):
+    g, rr = draw(t + 1)
+    t0 = time.perf_counter(); host_round(g, rr, "cost_scan")
+    t_scan += time.perf_counter() - t0
+for t in range(rounds):
+    g, rr = draw(t + 1)
+    t0 = time.perf_counter(); host_round(g, rr)
+    t1 = time.perf_counter(); batched_round(g, rr)
+    t_host += t1 - t0; t_batched += time.perf_counter() - t1
+print(json.dumps({"host_scan_ms": t_scan / scan_rounds * 1e3,
+                  "host_ms": t_host / rounds * 1e3,
+                  "batched_ms": t_batched / rounds * 1e3}))
+"""
+
 # engine CLI name -> (FeelServer engine, n_buckets override or None)
 ENGINES = {"loop": ("loop", None),
            "vectorized": ("vectorized", None),
@@ -167,6 +266,47 @@ def bench_sweep(n_seeds, n_train, n_test, rounds):
     return base / res["sweep"]["s_total"]
 
 
+CONTROL_KS = (50, 500, 2000)      # the tracked BENCH_control.json grid
+
+
+def bench_control(ks, n_runs, rounds, write_json=True):
+    """Host vs batched control plane: per-round schedule phase of an
+    ``n_runs``-run sweep at each K (fresh subprocess per K; the worker
+    asserts selection parity across ALL five policies before timing).
+
+    The JSON trajectory artifact is only (over)written for the canonical
+    ``CONTROL_KS`` grid — an ad-hoc ``--ks 8`` sanity run must not clobber
+    the tracked measurement."""
+    print("control,K,n_runs,host_scan_ms,host_ms,batched_ms,"
+          "speedup_vs_scan,speedup")
+    rows = []
+    for k in ks:
+        out = _run_worker(_CONTROL_WORKER, [k, n_runs, rounds])
+        speedup = out["host_ms"] / out["batched_ms"]
+        vs_scan = out["host_scan_ms"] / out["batched_ms"]
+        rows.append({"K": k, "n_runs": n_runs,
+                     "host_scan_ms": round(out["host_scan_ms"], 3),
+                     "host_ms": round(out["host_ms"], 3),
+                     "batched_ms": round(out["batched_ms"], 3),
+                     "speedup_vs_scan": round(vs_scan, 2),
+                     "speedup": round(speedup, 2)})
+        print(f"control,{k},{n_runs},{out['host_scan_ms']:.2f},"
+              f"{out['host_ms']:.2f},{out['batched_ms']:.2f},"
+              f"{vs_scan:.2f},{speedup:.2f}", flush=True)
+    if write_json and tuple(ks) == CONTROL_KS:
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_control.json")
+        with open(path, "w") as f:
+            json.dump({"bench": "control_plane_schedule_phase",
+                       "unit": "ms_per_round_all_runs", "rows": rows}, f,
+                      indent=2)
+        print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+    elif write_json:
+        print(f"# not the canonical --ks {' '.join(map(str, CONTROL_KS))}"
+              " grid; BENCH_control.json left untouched", file=sys.stderr)
+    return rows
+
+
 def smoke():
     """Tiny end-to-end run of both benchmarks with loud assertions.
 
@@ -181,8 +321,13 @@ def smoke():
     assert all(t > 0 for name in out for t in out[name][2])
     speedup = bench_sweep(2, 3000, 300, 2)
     assert speedup > 0, speedup
+    # control plane: the worker's internal parity assertion (host ==
+    # batched selections for all five policies) is the actual gate
+    ctl_rows = bench_control([50], n_runs=6, rounds=3, write_json=False)
+    assert all(r["host_ms"] > 0 and r["batched_ms"] > 0 for r in ctl_rows)
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
-          f"sweep speedup {speedup:.2f}x", file=sys.stderr)
+          f"sweep speedup {speedup:.2f}x, "
+          f"control speedup {ctl_rows[0]['speedup']:.2f}x", file=sys.stderr)
 
 
 def main():
@@ -203,12 +348,22 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="benchmark run_sweep vs sequential run_experiment "
                          "(uses --seeds as the seed count)")
+    ap.add_argument("--control", action="store_true",
+                    help="benchmark the control plane: host vs batched "
+                         "schedule phase at each --ks; writes "
+                         "results/BENCH_control.json")
+    ap.add_argument("--control-runs", type=int, default=12,
+                    help="number of stacked runs for --control (a 'sweep' "
+                         "of ~ policies x seeds)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny asserted run of both benchmarks (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.control:
+        bench_control(args.ks, args.control_runs, max(args.rounds, 3))
         return
     if args.sweep:
         bench_sweep(args.seeds, args.n_train or 10_000, args.n_test,

@@ -289,3 +289,24 @@ class FeelConfig:
     cpu_hz_min: float = 5e7       # f_k drawn uniformly in [min, max]
     cpu_hz_max: float = 5e8
     sample_bits: float = 28 * 28 * 8
+
+    # ------------------------------------------------------------------ #
+    # Derived linear-scale wireless constants. Both control planes — the
+    # host-numpy oracle (core/wireless.py) and the batched JAX kernel
+    # (core/control.py) — must feed Eq. 4/9 the exact same float64
+    # scalars, so the dBm -> watt conversion lives here, once
+    # (``dbm_to_watt`` below; wireless.py re-exports it).
+    # ------------------------------------------------------------------ #
+    @property
+    def p_watt(self) -> float:
+        """Uplink transmit power P_k in watts."""
+        return dbm_to_watt(self.tx_power_dbm)
+
+    @property
+    def n0_watt_hz(self) -> float:
+        """Noise power spectral density N0 in W/Hz."""
+        return dbm_to_watt(self.noise_dbm_hz)
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) / 1000.0

@@ -2,24 +2,40 @@
 
 diversity (Eq. 2) + reputation (Eq. 1) -> data-quality value (Eq. 3);
 wireless cost model (Eq. 4-7, 9); greedy-knapsack scheduler (Algorithm 2)
-with baseline policies; label-flip poisoning (§III-B.1).
+with baseline policies; label-flip poisoning (§III-B.1); batched JAX
+control plane (core/control.py) scheduling all runs of a sweep in one
+vmapped call, with the numpy implementations as the bit-parity oracle.
 """
-from repro.core.diversity import diversity_index, gini_simpson, normalize
+from repro.core.control import (ControlState, finalize_runs, schedule_runs)
+from repro.core.diversity import (diversity_index, diversity_index_eq2,
+                                  diversity_index_rows, gini_simpson,
+                                  normalize, normalize_last,
+                                  normalize_rows)
 from repro.core.poisoning import (EASY_PAIR, HARD_PAIR, LabelFlipAttack,
                                   pick_malicious)
 from repro.core.quality import adaptive_weights, data_quality_value
-from repro.core.reputation import ReputationTracker
-from repro.core.scheduler import (POLICIES, Schedule, best_channel_schedule,
+from repro.core.reputation import ReputationTracker, reputation_update_eq1
+from repro.core.scheduler import (POLICIES, POLICY_IDS, Schedule,
+                                  best_channel_schedule,
                                   brute_force_schedule, dqs_schedule,
-                                  max_count_schedule, random_schedule,
+                                  greedy_pack, greedy_pack_jnp,
+                                  max_count_schedule, pack_scan,
+                                  priority_key, random_schedule,
                                   top_value_schedule)
-from repro.core.wireless import ChannelState, WirelessModel, dbm_to_watt
+from repro.core.wireless import (ChannelState, WirelessModel, cost_bisect,
+                                 dbm_to_watt, rate_eq4)
 
 __all__ = [
-    "diversity_index", "gini_simpson", "normalize",
+    "ControlState", "finalize_runs", "schedule_runs",
+    "diversity_index", "diversity_index_eq2", "diversity_index_rows",
+    "gini_simpson", "normalize", "normalize_last", "normalize_rows",
     "EASY_PAIR", "HARD_PAIR", "LabelFlipAttack", "pick_malicious",
-    "adaptive_weights", "data_quality_value", "ReputationTracker",
-    "POLICIES", "Schedule", "best_channel_schedule", "brute_force_schedule",
-    "dqs_schedule", "max_count_schedule", "random_schedule",
-    "top_value_schedule", "ChannelState", "WirelessModel", "dbm_to_watt",
+    "adaptive_weights", "data_quality_value",
+    "ReputationTracker", "reputation_update_eq1",
+    "POLICIES", "POLICY_IDS", "Schedule", "best_channel_schedule",
+    "brute_force_schedule", "dqs_schedule", "greedy_pack",
+    "greedy_pack_jnp", "max_count_schedule", "pack_scan", "priority_key",
+    "random_schedule", "top_value_schedule",
+    "ChannelState", "WirelessModel", "cost_bisect", "dbm_to_watt",
+    "rate_eq4",
 ]

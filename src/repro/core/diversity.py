@@ -4,11 +4,17 @@
 i in {elements diversity, dataset size, age}. For classification the elements
 diversity is the Gini-Simpson index over label frequencies (paper §V-B.1,
 following [10] arXiv:2102.09491).
+
+``normalize_last`` / ``diversity_index_eq2`` are the pure-JAX twins used by
+the batched control plane (core/control.py): the same Eq. 2, over a
+trailing UE axis with arbitrary leading batch (run) axes, jit/vmap-able.
+The numpy pair stays as the host oracle.
 """
 from __future__ import annotations
 
 from typing import Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -21,13 +27,33 @@ def gini_simpson(labels: np.ndarray, n_classes: int) -> float:
     return float(1.0 - np.sum(p * p))
 
 
+def normalize_rows(values: np.ndarray) -> np.ndarray:
+    """Min-max normalise a metric to [0, 1] along the last (UE) axis, any
+    leading (run) batch axes — the ONE numpy definition of the Eq. 2
+    normalisation (``normalize`` is its 1-D view; the 1e-12
+    degenerate-span rule must stay in lockstep with ``normalize_last``
+    or host/batched parity breaks)."""
+    values = np.asarray(values, float)
+    lo = values.min(-1, keepdims=True)
+    hi = values.max(-1, keepdims=True)
+    span = hi - lo
+    return np.where(span < 1e-12, 1.0,
+                    (values - lo) / np.where(span < 1e-12, 1.0, span))
+
+
 def normalize(values: np.ndarray) -> np.ndarray:
     """Min-max normalise a metric across UEs to [0, 1]."""
-    values = np.asarray(values, float)
-    lo, hi = values.min(), values.max()
-    if hi - lo < 1e-12:
-        return np.ones_like(values)
-    return (values - lo) / (hi - lo)
+    return normalize_rows(values)
+
+
+def diversity_index_rows(element_diversity, dataset_sizes, ages,
+                         gamma) -> np.ndarray:
+    """Eq. 2 over (..., K) numpy arrays (leading run axes welcome); the
+    three weighted terms accumulate left-to-right — the order every other
+    implementation must match for bit-parity."""
+    return (gamma[0] * normalize_rows(element_diversity)
+            + gamma[1] * normalize_rows(dataset_sizes)
+            + gamma[2] * normalize_rows(ages))
 
 
 def diversity_index(element_diversity: np.ndarray,
@@ -36,10 +62,25 @@ def diversity_index(element_diversity: np.ndarray,
                     gamma: Sequence[float]) -> np.ndarray:
     """Eq. 2 across all K UEs. ``ages`` = rounds since last participation
     (higher -> staler -> more valuable to refresh)."""
-    v = np.stack([
-        normalize(element_diversity),
-        normalize(dataset_sizes),
-        normalize(ages),
-    ])
-    g = np.asarray(gamma, float)[:, None]
-    return (g * v).sum(0)
+    return diversity_index_rows(element_diversity, dataset_sizes, ages,
+                                np.asarray(gamma, float))
+
+
+# ---------------------------------------------------------------------- #
+# Pure-JAX twins (batched "jax" kernel layout).
+# ---------------------------------------------------------------------- #
+def normalize_last(values):
+    """``normalize_rows`` in jnp (last/UE axis, leading batch axes)."""
+    lo = values.min(-1, keepdims=True)
+    hi = values.max(-1, keepdims=True)
+    return jnp.where(hi - lo < 1e-12, jnp.ones_like(values),
+                     (values - lo) / (hi - lo))
+
+
+def diversity_index_eq2(element_diversity, dataset_sizes, ages, gamma):
+    """``diversity_index_rows`` in jnp — same left-to-right accumulation,
+    so the two agree bit-for-bit in float64 (modulo XLA FMA contraction,
+    see core/control.py)."""
+    return (gamma[0] * normalize_last(element_diversity)
+            + gamma[1] * normalize_last(dataset_sizes)
+            + gamma[2] * normalize_last(ages))

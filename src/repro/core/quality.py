@@ -1,24 +1,36 @@
-"""Data-quality value (paper §III-B.4, Eq. 3): V_k = w1 * R_k + w2 * I_k."""
+"""Data-quality value (paper §III-B.4, Eq. 3): V_k = w1 * R_k + w2 * I_k.
+
+``data_quality_value`` is dtype-polymorphic — it is a pure elementwise
+expression, so the batched control plane (core/control.py) calls it on jnp
+arrays under vmap while the host oracle calls it on numpy arrays.
+"""
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional, Tuple
 
 from repro.configs.base import FeelConfig
 
 
-def data_quality_value(reputation: np.ndarray, diversity: np.ndarray,
-                       cfg: FeelConfig) -> np.ndarray:
-    return cfg.omega_rep * reputation + cfg.omega_div * diversity
+def data_quality_value(reputation, diversity, cfg: FeelConfig,
+                       omega: Optional[Tuple[float, float]] = None):
+    """Eq. 3. ``omega = (w_rep, w_div)`` overrides the config weights —
+    the adaptive-omega schedule passes the annealed pair here instead of
+    allocating a replaced config every round."""
+    w_rep, w_div = omega if omega is not None else (cfg.omega_rep,
+                                                   cfg.omega_div)
+    return w_rep * reputation + w_div * diversity
 
 
 def adaptive_weights(round_t: int, total_rounds: int,
-                     cfg: FeelConfig) -> FeelConfig:
+                     cfg: FeelConfig) -> Tuple[float, float]:
     """Beyond-paper extension motivated by the paper's own §V-B.2 observation:
     diversity matters early, reputation matters late. Linearly anneals
-    (omega_div, omega_rep) from (1, 0)-leaning to (0, 1)-leaning over training.
+    (omega_div, omega_rep) from (1, 0)-leaning to (0, 1)-leaning over
+    training. Returns the ``(w_rep, w_div)`` pair — allocation-free, the
+    per-round scheduling hot path feeds it straight to
+    ``data_quality_value(..., omega=...)``.
     """
-    import dataclasses
     frac = round_t / max(total_rounds - 1, 1)
     total = cfg.omega_rep + cfg.omega_div
     w_rep = total * (0.25 + 0.5 * frac)
-    return dataclasses.replace(cfg, omega_rep=w_rep, omega_div=total - w_rep)
+    return w_rep, total - w_rep

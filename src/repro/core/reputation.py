@@ -27,9 +27,29 @@ tests/test_cohort.py::test_reputation_orders_honest_above_poisoner.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
+
+
+def reputation_update_eq1(values, sel_mask, acc_local, acc_test,
+                          eta, beta1, beta2):
+    """Eq. 1 as a pure jnp function over (..., K) arrays (batched control
+    plane; the host oracle is ``ReputationTracker.update``).
+
+    ``sel_mask`` — {0,1} participation mask; ``acc_local`` / ``acc_test``
+    — per-UE accuracies scattered to the full K axis (entries of
+    unscheduled UEs are ignored). The cohort average of Eq. 1's beta1 term
+    runs over the participants only, and only participants' reputations
+    move (then clip to [0, 1], matching the tracker).
+    """
+    m = sel_mask.astype(values.dtype)
+    n = m.sum(-1, keepdims=True)
+    avg = (acc_local * m).sum(-1, keepdims=True) / jnp.maximum(n, 1.0)
+    delta = eta * (beta1 * (acc_local - avg)
+                   + beta2 * (acc_local - acc_test))
+    return jnp.where(m > 0, jnp.clip(values - delta, 0.0, 1.0), values)
 
 
 class ReputationTracker:

@@ -13,6 +13,23 @@ take the better of the greedy pack and the single best feasible UE — which
 guarantees ``objective >= OPT / 2`` (tests/test_scheduler.py pins this
 against ``brute_force_schedule`` on random instances).
 
+Every packing policy is one *priority key* feeding one shared greedy-packing
+primitive: sort ascending by the key, then walk the order consuming the
+budget of K fractions, SKIPPING any UE whose cost does not fit (a later,
+cheaper UE may still fit — this is not a prefix-sum take-while, see
+``greedy_pack``). ``priority_key`` builds the key per policy:
+
+    dqs          -(V_k / c_k)          (Alg. 2 density order)
+    random       inverse permutation    (uniform order, Li et al. style)
+    best_channel c_k*K - gains/max      (Nishio & Yonetani: good channels)
+    max_count    c_k                    (Zeng et al.: cheapest first)
+
+``top_value`` (paper §V-B.1) is the one non-packing policy: top-N by value,
+no wireless constraint. ``greedy_pack_jnp`` is the jit/vmap-able twin of the
+packing primitive used by the batched control plane (core/control.py); a
+lax.scan carries the remaining budget so the skipping semantics match the
+host loop exactly.
+
 Baseline policies used by the paper's comparison figures are provided too,
 plus a brute-force exact solver for small K (test oracle for the NP-hard
 claim).
@@ -23,6 +40,8 @@ import dataclasses
 import itertools
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
@@ -44,6 +63,81 @@ class Schedule:
         return float(self.value[self.x].sum())
 
 
+# ---------------------------------------------------------------------- #
+# The shared packing primitive + per-policy priority keys
+# ---------------------------------------------------------------------- #
+def greedy_pack(order: np.ndarray, costs: np.ndarray, k: int):
+    """Walk ``order`` packing UEs into a budget of ``k`` fractions.
+
+    A UE whose cost exceeds the *remaining* budget (or the deadline, c > K)
+    is skipped and the walk continues — later cheaper UEs may still fit.
+    Returns (x bool (K,), alpha (K,)).
+    """
+    x = np.zeros(k, bool)
+    alpha = np.zeros(k)
+    budget = k
+    for u in order:
+        c = int(costs[u])
+        if c <= k and budget - c >= 0:
+            x[u] = True
+            alpha[u] = c / k
+            budget -= c
+    return x, alpha
+
+
+def priority_key(policy: str, values, costs, k: int,
+                 gains=None, rand_rank=None):
+    """Ascending-sort key whose stable argsort reproduces each packing
+    policy's visit order (see module docstring).
+
+    Pure elementwise expressions over the LAST (UE) axis, polymorphic in
+    numpy/jnp and in leading batch (run) axes — the ONE definition of
+    every policy's order, evaluated identically by the host oracle and
+    both batched control-plane kernel layouts (core/control.py).
+    ``rand_rank`` is the inverse permutation of the ``random`` policy's
+    visit order (sorting it ascending reproduces the permutation).
+    """
+    if policy == "dqs":
+        return -(values / costs)
+    if policy == "random":
+        return rand_rank
+    if policy == "best_channel":
+        return costs * k - gains / (gains.max(-1, keepdims=True) + 1e-12)
+    if policy == "max_count":
+        return costs
+    raise KeyError(policy)
+
+
+def pack_scan(c_sorted, k: int):
+    """Take-mask of the skipping greedy over PRE-SORTED costs (..., K).
+
+    NOT a masked prefix-sum take-while: the host oracle SKIPS a UE that
+    does not fit the remaining budget and keeps walking, so whether
+    position i is packed depends on every prior decision — a lax.scan
+    carries the remaining budget through the K sorted positions (O(K)
+    sequential steps, all leading batch axes advancing together).
+    """
+    init = jnp.full(c_sorted.shape[:-1], k, c_sorted.dtype)
+
+    def step(budget, c):
+        take = (c <= k) & (c <= budget)
+        return budget - jnp.where(take, c, 0), take
+
+    _, take = jax.lax.scan(step, init, jnp.moveaxis(c_sorted, -1, 0))
+    return jnp.moveaxis(take, 0, -1)
+
+
+def greedy_pack_jnp(sort_key, costs, k: int):
+    """jit/vmap-able twin of ``greedy_pack`` for the batched control plane:
+    stable argsort of the priority key, then the ``pack_scan`` budget walk.
+    ``costs`` int32; returns (x bool (K,), alpha float (K,))."""
+    order = jnp.argsort(sort_key, stable=True)
+    take = pack_scan(jnp.take(costs, order), k)
+    x = jnp.zeros(k, bool).at[order].set(take)
+    alpha = jnp.where(x, costs.astype(sort_key.dtype) / k, 0.0)
+    return x, alpha
+
+
 def dqs_schedule(values: np.ndarray, costs: np.ndarray,
                  cfg: FeelConfig) -> Schedule:
     """Algorithm 2: greedy knapsack by V_k / c_k over a budget of K fractions,
@@ -51,20 +145,8 @@ def dqs_schedule(values: np.ndarray, costs: np.ndarray,
     best feasible UE beats the whole greedy pack, schedule it alone — this is
     what makes the 1/2-approximation bound hold."""
     K = cfg.n_ues
-    order = np.argsort(-values / costs, kind="stable")
-    x = np.zeros(K, bool)
-    alpha = np.zeros(K)
-    budget = K
-    for k in order:
-        c = int(costs[k])
-        if c > K:                      # cannot meet the deadline at all
-            continue
-        if budget - c >= 0:
-            x[k] = True
-            alpha[k] = c / K
-            budget -= c
-        if budget <= 0:
-            break
+    order = np.argsort(priority_key("dqs", values, costs, K), kind="stable")
+    x, alpha = greedy_pack(order, costs, K)
     feas = costs <= K
     if feas.any():
         k_best = int(np.flatnonzero(feas)[np.argmax(values[feas])])
@@ -107,48 +189,25 @@ def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
 def random_schedule(values, costs, cfg, rng) -> Schedule:
     """Random feasible packing (ignores data quality)."""
     K = cfg.n_ues
-    order = rng.permutation(K)
-    x = np.zeros(K, bool)
-    alpha = np.zeros(K)
-    budget = K
-    for k in order:
-        c = int(costs[k])
-        if c <= K and budget - c >= 0:
-            x[k] = True
-            alpha[k] = c / K
-            budget -= c
+    x, alpha = greedy_pack(rng.permutation(K), costs, K)
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
 def best_channel_schedule(values, costs, cfg, gains) -> Schedule:
     """Nishio & Yonetani-style: prioritise good channels (min cost first)."""
     K = cfg.n_ues
-    order = np.argsort(costs * K - gains / (gains.max() + 1e-12), kind="stable")
-    x = np.zeros(K, bool)
-    alpha = np.zeros(K)
-    budget = K
-    for k in order:
-        c = int(costs[k])
-        if c <= K and budget - c >= 0:
-            x[k] = True
-            alpha[k] = c / K
-            budget -= c
+    order = np.argsort(priority_key("best_channel", values, costs, K,
+                                    gains=gains), kind="stable")
+    x, alpha = greedy_pack(order, costs, K)
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
 def max_count_schedule(values, costs, cfg) -> Schedule:
     """Zeng et al.-style: maximise the number of scheduled UEs."""
     K = cfg.n_ues
-    order = np.argsort(costs, kind="stable")
-    x = np.zeros(K, bool)
-    alpha = np.zeros(K)
-    budget = K
-    for k in order:
-        c = int(costs[k])
-        if c <= K and budget - c >= 0:
-            x[k] = True
-            alpha[k] = c / K
-            budget -= c
+    order = np.argsort(priority_key("max_count", values, costs, K),
+                       kind="stable")
+    x, alpha = greedy_pack(order, costs, K)
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
@@ -174,3 +233,8 @@ POLICIES = {
     "best_channel": best_channel_schedule,
     "max_count": max_count_schedule,
 }
+
+# Integer ids used by the batched control plane (core/control.py) to select
+# a run's priority key inside the vmapped kernel.
+POLICY_IDS = {"dqs": 0, "random": 1, "best_channel": 2, "max_count": 3,
+              "top_value": 4}

@@ -11,19 +11,37 @@ Round deadline T bounds ``t_train + t_up`` (Eq. 5); training time follows the
 cycles/bit model (Eq. 6); upload time ``t_up = s / r_k`` (Eq. 7). The DQS
 bandwidth *cost* c_k (Eq. 9) is the minimum number of uniform 1/K fractions
 that meets the UE's minimum rate.
+
+Eq. 9 is solved by monotone bisection: r_k(c/K) is strictly increasing in c
+(Eq. 4 is concave increasing in the bandwidth fraction), so the minimal
+feasible c is found in O(log K) rate evaluations per UE instead of the
+seed's dense (K, K) rate matrix — O(K log K) total, which is what lets the
+control plane scale to thousands of UEs. ``cost_scan`` keeps the exhaustive
+scan as the test oracle (tests/test_wireless.py pins exact equality,
+including the infeasible c = K+1 and blown-deadline t_train >= T edges).
+
+The module also exposes the pure-JAX twins (``rate_eq4``, ``cost_bisect``)
+used by the batched control plane (core/control.py): same formulas over
+arbitrary leading batch axes, jit/vmap-able, run in float64 (under
+``jax.experimental.enable_x64``) so they agree with the numpy oracle to
+the last integer cost. The Eq. 9 right-hand side (min rates) is
+round-invariant, so the control plane precomputes it once per run with
+the numpy ``min_rate`` — there is deliberately no jnp twin for it.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FeelConfig
-
-
-def dbm_to_watt(dbm: float) -> float:
-    return 10.0 ** (dbm / 10.0) / 1000.0
+from repro.configs.base import FeelConfig, dbm_to_watt  # noqa: F401
+# dbm_to_watt is defined beside FeelConfig's p_watt/n0_watt_hz properties
+# (one conversion shared by both control planes) and re-exported here for
+# the historical import path.
 
 
 @dataclasses.dataclass
@@ -44,8 +62,8 @@ class WirelessModel:
         half = cfg.cell_side_m / 2.0
         xy = rng.uniform(-half, half, size=(cfg.n_ues, 2))
         self.distances = np.maximum(np.linalg.norm(xy, axis=1), 1.0)
-        self.p_watt = dbm_to_watt(cfg.tx_power_dbm)
-        self.n0 = dbm_to_watt(cfg.noise_dbm_hz)     # W/Hz
+        self.p_watt = cfg.p_watt
+        self.n0 = cfg.n0_watt_hz     # W/Hz
 
     def draw_channels(self) -> ChannelState:
         """Rayleigh |h|^2 ~ Exp(1); gains = d^-alpha |h|^2."""
@@ -87,7 +105,30 @@ class WirelessModel:
             return np.where(slack > 0, self.cfg.model_size_bits / slack, np.inf)
 
     def cost(self, gains: np.ndarray, train_times: np.ndarray) -> np.ndarray:
-        """c_k = min{c in [1,K] : r_k(c/K) >= r_min}; K+1 when infeasible."""
+        """c_k = min{c in [1,K] : r_k(c/K) >= r_min}; K+1 when infeasible.
+
+        Monotone bisection (see module docstring): rate is strictly
+        increasing in c, so binary search over the integers [1, K] finds
+        the same minimum the exhaustive scan finds, in O(log K) rate
+        evaluations. Infeasibility (including a blown deadline, r_min =
+        inf) is decided up front by probing the whole band (c = K).
+        """
+        K = self.cfg.n_ues
+        r_min = self.min_rate(train_times)                      # (K,)
+        feasible = self.rate(gains, np.ones_like(gains)) >= r_min
+        lo = np.ones(gains.shape, int)
+        hi = np.full(gains.shape, K, int)
+        while np.any(lo < hi):
+            mid = (lo + hi) // 2
+            ok = self.rate(gains, mid / K) >= r_min
+            lo = np.where(ok, lo, mid + 1)
+            hi = np.where(ok, mid, hi)
+        return np.where(feasible, lo, K + 1).astype(int)
+
+    def cost_scan(self, gains: np.ndarray,
+                  train_times: np.ndarray) -> np.ndarray:
+        """Exhaustive Eq. 9 (the seed's dense (K, K) rate matrix) — kept as
+        the O(K^2) test oracle for ``cost``."""
         K = self.cfg.n_ues
         r_min = self.min_rate(train_times)                      # (K,)
         cs = np.arange(1, K + 1) / K                            # (K,) fractions
@@ -95,3 +136,40 @@ class WirelessModel:
         feasible = rates >= r_min[:, None]
         c = np.where(feasible.any(1), feasible.argmax(1) + 1, K + 1)
         return c.astype(int)
+
+
+# ---------------------------------------------------------------------- #
+# Pure-JAX twins (batched control plane) — arbitrary leading batch axes.
+# ---------------------------------------------------------------------- #
+def rate_eq4(gains, alpha, bandwidth_hz, p_watt, n0):
+    """Eq. 4 in jnp; 0 where alpha == 0 (the inf/nan the division produces
+    there is discarded by the where)."""
+    snr = gains * p_watt / (alpha * bandwidth_hz * n0)
+    return jnp.where(alpha > 0, alpha * bandwidth_hz * jnp.log2(1.0 + snr),
+                     0.0)
+
+
+def cost_bisect(gains, r_min, k: int, bandwidth_hz, p_watt, n0):
+    """Eq. 9 by monotone bisection, jnp, batched: (..., K_ues) -> int32.
+
+    ``k`` (static) is the fraction denominator (cfg.n_ues). The loop runs a
+    fixed ceil(log2 k) + 1 iterations — once the bracket collapses the
+    extra iterations are no-ops for feasible UEs, and infeasible UEs are
+    overridden by the up-front whole-band probe.
+    """
+    def ok(c):
+        return rate_eq4(gains, c / k, bandwidth_hz, p_watt, n0) >= r_min
+
+    feasible = ok(jnp.full(gains.shape, k, jnp.int32))
+    n_iter = max(1, math.ceil(math.log2(max(k, 2)))) + 1
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        hit = ok(mid)
+        return jnp.where(hit, lo, mid + 1), jnp.where(hit, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(
+        0, n_iter, body, (jnp.ones(gains.shape, jnp.int32),
+                          jnp.full(gains.shape, k, jnp.int32)))
+    return jnp.where(feasible, lo, k + 1).astype(jnp.int32)

@@ -37,9 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
-from repro.core import (ReputationTracker, WirelessModel, data_quality_value,
-                        diversity_index, dqs_schedule, gini_simpson,
-                        top_value_schedule)
+from repro.core import (ReputationTracker, WirelessModel, adaptive_weights,
+                        data_quality_value, diversity_index, dqs_schedule,
+                        gini_simpson, top_value_schedule)
+from repro.core import control as ctl
 from repro.core.scheduler import (Schedule, best_channel_schedule,
                                   max_count_schedule, random_schedule)
 from repro.data.partition import (ClientData, label_histogram,
@@ -125,14 +126,21 @@ class FeelServer:
     'top_value' reproduces §V-B.1 (pure data-quality selection, no wireless).
 
     engine: 'vectorized' | 'loop' (see module docstring).
+    control: 'batched' | 'host' — the control plane (values -> Eq. 9 costs
+    -> Alg. 2 selection -> Eq. 1 reputation). 'batched' (default) runs it
+    as the jitted vmapped kernel of core/control.py (one run here; the
+    sweep runner stacks ALL its runs into the same kernel); 'host' is the
+    sequential numpy oracle (tests/test_control.py pins the parity) —
+    mirroring the engine='loop' pattern of the data plane.
     n_buckets: number of max_samples size buckets for the vectorized
     engine (1 = the old single global pad; 2-3 reclaim the padding waste).
 
     The underscore round-phase methods (_schedule_round, _cohort_parts,
     _merge_cohort, _apply_attacks, _eval_masks, _aggregate_cohort,
-    _finalize_round) are a semi-public contract: the batched sweep runner
-    (federated/simulation.py) interleaves them across runs — change their
-    signatures and the sweep changes with them.
+    _finalize_round, _log_round, draw_control_inputs) are a semi-public
+    contract: the batched sweep runner (federated/simulation.py)
+    interleaves them across runs — change their signatures and the sweep
+    changes with them.
     """
 
     _N_BUCKET = 8   # cohort sizes are padded to a multiple of this with
@@ -145,8 +153,11 @@ class FeelServer:
                  watch_class: Optional[int] = None, model_poison=None,
                  engine: str = "vectorized", batch_size: int = 50,
                  pad_to: Optional[int] = None, n_buckets: int = 3,
-                 cohort_data: Optional[CohortData] = None):
+                 cohort_data: Optional[CohortData] = None,
+                 control: str = "batched"):
         assert engine in ("vectorized", "loop"), engine
+        assert control in ("batched", "host"), control
+        self.control = control
         self.cfg = cfg
         self.clients = clients
         self.test = test
@@ -185,17 +196,24 @@ class FeelServer:
         # vectorized-engine client layout: injected (sweep-shared) or built
         # lazily on first use (see CohortData)
         self._cohort_data = cohort_data
+        # batched-control state (R=1): built lazily; the sweep runner builds
+        # its own R=n_runs ControlState instead and never touches this one
+        self._ctrl: Optional[ctl.ControlState] = None
         self.pad_waste: List[float] = []   # per-round padded/real sample ratio
         self.logs: List[RoundLog] = []
 
     # ------------------------------------------------------------------ #
+    def _omega(self, round_t: int) -> Tuple[float, float]:
+        """(w_rep, w_div) for this round — annealed under adaptive omega."""
+        if self.adaptive_omega:
+            return adaptive_weights(round_t, self.cfg.rounds, self.cfg)
+        return self.cfg.omega_rep, self.cfg.omega_div
+
     def _values(self, round_t: int) -> np.ndarray:
         cfg = self.cfg
-        if self.adaptive_omega:
-            from repro.core import adaptive_weights
-            cfg = adaptive_weights(round_t, cfg.rounds, cfg)
         I = diversity_index(self.divs, self.sizes, self.ages, cfg.gamma)
-        return data_quality_value(self.reputation.values, I, cfg)
+        return data_quality_value(self.reputation.values, I, cfg,
+                                  omega=self._omega(round_t))
 
     def _schedule(self, values: np.ndarray) -> Schedule:
         cfg = self.cfg
@@ -374,6 +392,8 @@ class FeelServer:
         had no feasible point, so the round's *objective* is 0.0 (the
         forced UE's V_k is not credited to the scheduler).
         """
+        if self.control == "batched":
+            return self._schedule_round_batched(t)
         values = self._values(t)
         sched = self._schedule(values)
         sel = sched.selected
@@ -392,6 +412,37 @@ class FeelServer:
             forced = True
         return values, sched, sel, forced
 
+    # -- batched control plane (core/control.py) ----------------------- #
+    def _control_state(self) -> ctl.ControlState:
+        if self._ctrl is None:
+            self._ctrl = ctl.ControlState.from_servers([self])
+        return self._ctrl
+
+    def draw_control_inputs(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(gains, rand_rank) for one round, drawn from THIS server's RNG
+        in the oracle's order: channel draw first, then — only for the
+        ``random`` policy — the packing permutation. The batched kernel is
+        a deterministic function of these host draws, which is what keeps
+        every run's stream identical to its sequential twin."""
+        gains = self.wireless.draw_channels().gains
+        if self.policy == "random":
+            rand_rank = np.argsort(self.rng.permutation(self.cfg.n_ues))
+        else:
+            rand_rank = np.arange(self.cfg.n_ues)
+        return gains, rand_rank
+
+    def _schedule_round_batched(self, t: int):
+        st = self._control_state()
+        st.pull([self])
+        gains, rand_rank = self.draw_control_inputs()
+        w_rep, w_div = self._omega(t)
+        x, alpha, costs, values, forced = ctl.schedule_runs(
+            st, gains[None], rand_rank[None],
+            np.array([w_rep]), np.array([w_div]))
+        sched = Schedule(x=x[0], alpha=alpha[0], cost=costs[0],
+                         value=values[0])
+        return values[0], sched, sched.selected, bool(forced[0])
+
     def _train_cohort(self, sel: np.ndarray) -> Tuple[np.ndarray,
                                                       np.ndarray]:
         if self.engine == "vectorized":
@@ -401,12 +452,24 @@ class FeelServer:
     def _finalize_round(self, t: int, values, sched, sel, forced,
                         acc_local, acc_test, g_acc, src_acc) -> RoundLog:
         """Alg. 1 lines 15-16 + logging: reputation, staleness, RoundLog."""
-        self.reputation.update(sel, acc_local, acc_test)
+        if self.control == "batched":
+            st = self._control_state()
+            st.pull([self])
+            ctl.finalize_runs(st, [sel], [acc_local], [acc_test])
+            st.push([self])
+        else:
+            self.reputation.update(sel, acc_local, acc_test)
+            # ages: selected reset, others grow (staleness metric of Eq. 2)
+            self.ages += 1.0
+            self.ages[sel] = 1.0
+        return self._log_round(t, values, sched, sel, forced, g_acc,
+                               src_acc)
 
-        # ages: selected reset, others grow (staleness metric of Eq. 2)
-        self.ages += 1.0
-        self.ages[sel] = 1.0
-
+    def _log_round(self, t: int, values, sched, sel, forced, g_acc,
+                   src_acc) -> RoundLog:
+        """Append the RoundLog for a finalized round (reputation/ages
+        already updated — the batched sweep runner updates ALL runs in one
+        ``control.finalize_runs`` call and then logs per run)."""
         log = RoundLog(
             round=t, selected=sel, global_acc=g_acc,
             n_malicious_selected=sum(self.clients[k].malicious for k in sel),

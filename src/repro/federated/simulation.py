@@ -32,7 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
+from repro.core import control as ctl
 from repro.core.poisoning import LabelFlipAttack, pick_malicious
+from repro.core.scheduler import Schedule
 from repro.data.partition import label_histogram, partition
 from repro.data.synthetic_mnist import N_CLASSES, generate
 from repro.federated import cohort
@@ -50,7 +52,8 @@ def run_experiment(policy: str = "dqs",
                    no_attack: bool = False,
                    model_poison_scale: Optional[float] = None,
                    lie_boost: float = 0.0,
-                   engine: str = "vectorized") -> Dict:
+                   engine: str = "vectorized",
+                   control: str = "batched") -> Dict:
     cfg = cfg or FeelConfig()
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0], omega_div=omega[1])
@@ -69,7 +72,7 @@ def run_experiment(policy: str = "dqs",
     server = FeelServer(cfg, clients, test, rng, policy=policy,
                         adaptive_omega=adaptive_omega,
                         watch_class=attack_pair[0], model_poison=mp,
-                        lie_boost=lie_boost, engine=engine)
+                        lie_boost=lie_boost, engine=engine, control=control)
     logs = server.run(rounds)
     return {
         "acc": [l.global_acc for l in logs],
@@ -159,6 +162,7 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               model_poison_scale: Optional[float] = None,
               lie_boost: float = 0.0,
               engine: str = "vectorized",
+              control: str = "batched",
               n_buckets: int = 3,
               stack_runs: bool = True) -> SweepResult:
     """Run the full (policies x seeds x attack_pairs) grid batched.
@@ -172,6 +176,14 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
     runs in one vmapped call per size bucket: a shared ``pad_to`` makes the
     bucket levels identical across runs, so runs become one more slice of
     the stacked client axis (``cohort.cohort_train_multi``).
+
+    ``control="batched"`` (default) also stacks the *control plane*: with
+    ``stack_runs``, round t of every run is scheduled by ONE vmapped
+    ``core.control.schedule_runs`` call over a sweep-wide ``ControlState``
+    (and Eq. 1 reputations update in one ``finalize_runs``) instead of a
+    per-run numpy loop, so the schedule phase stops scaling linearly in
+    the number of runs. ``control="host"`` keeps the sequential numpy
+    control oracle per run.
 
     ``stack_runs=False`` (or engine="loop") executes the runs sequentially
     while still sharing the dataset/partition caches — the oracle the
@@ -250,7 +262,7 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                     cfg, clients, test, rng, policy=policy,
                     adaptive_omega=adaptive_omega, watch_class=pair[0],
                     model_poison=mp, lie_boost=lie_boost, engine=engine,
-                    pad_to=pad_to, n_buckets=n_buckets,
+                    control=control, pad_to=pad_to, n_buckets=n_buckets,
                     cohort_data=cohort_cache.get((seed, _attack_key(pair))))
                 watch = (test.y == pair[0]).astype(np.float32)
                 runs.append(_SweepRun(policy, seed, pair, server,
@@ -258,8 +270,12 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
 
     n_rounds = rounds or cfg.rounds
     if stack_runs and engine == "vectorized":
+        # sweep-wide control state: ONE vmapped schedule / reputation
+        # kernel call per round for ALL runs (core/control.py)
+        sweep_ctrl = (ctl.ControlState.from_servers(
+            [r.server for r in runs]) if control == "batched" else None)
         for t in range(n_rounds):
-            _sweep_round_stacked(runs, t)
+            _sweep_round_stacked(runs, t, sweep_ctrl)
     else:
         for run in runs:
             for t in range(n_rounds):
@@ -275,12 +291,38 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
 
 
 _PAD = FeelServer._N_BUCKET
-def _sweep_round_stacked(runs: List[_SweepRun], t: int) -> None:
-    """One round of every run, batched: schedule per run on the host, then
-    one ``cohort_train_multi`` per (shared client arrays, size bucket)
+def _schedule_runs_stacked(runs: List[_SweepRun],
+                           sweep_ctrl: ctl.ControlState, t: int) -> None:
+    """Phase A, batched control plane: draw each run's channel (and
+    ``random``-policy permutation) from its own host RNG — the oracle
+    streams — then schedule round t of ALL runs in one vmapped
+    ``control.schedule_runs`` call and scatter the per-run Schedules."""
+    servers = [r.server for r in runs]
+    sweep_ctrl.pull(servers)
+    K = servers[0].cfg.n_ues
+    gains = np.empty((len(runs), K))
+    rand_rank = np.empty((len(runs), K), int)
+    omega = np.empty((len(runs), 2))
+    for i, s in enumerate(servers):
+        gains[i], rand_rank[i] = s.draw_control_inputs()
+        omega[i] = s._omega(t)
+    x, alpha, costs, values, forced = ctl.schedule_runs(
+        sweep_ctrl, gains, rand_rank, omega[:, 0], omega[:, 1])
+    for i, run in enumerate(runs):
+        sched = Schedule(x=x[i], alpha=alpha[i], cost=costs[i],
+                         value=values[i])
+        run.plan = (values[i], sched, sched.selected, bool(forced[i]))
+
+
+def _sweep_round_stacked(runs: List[_SweepRun], t: int,
+                         sweep_ctrl: Optional[ctl.ControlState]
+                         = None) -> None:
+    """One round of every run, batched: one vmapped control-plane call for
+    all runs' schedules (host numpy per run when ``sweep_ctrl`` is None),
+    then one ``cohort_train_multi`` per (shared client arrays, size bucket)
     group, one ``cohort_eval`` per seed for the uploaded models, per-run
-    FedAvg, and one ``cohort_eval`` per seed for the global/source-class
-    metrics.
+    FedAvg, one ``cohort_eval`` per seed for the global/source-class
+    metrics, and one batched Eq. 1 reputation update.
 
     All device-side reshuffling uses gathers (``jnp.take``) whose compile
     cache is keyed on *index shapes*, never value-dependent slicing — the
@@ -294,9 +336,12 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int) -> None:
     assert all(r.server.lr == lr and r.server.batch_size == batch_size
                for r in runs)
 
-    # -- phase A: schedules (host-side numpy, per run) ------------------ #
-    for run in runs:
-        run.plan = run.server._schedule_round(t)
+    # -- phase A: schedules — one vmapped call for all runs ------------- #
+    if sweep_ctrl is not None:
+        _schedule_runs_stacked(runs, sweep_ctrl, t)
+    else:
+        for run in runs:
+            run.plan = run.server._schedule_round(t)
 
     # -- phase B: train — one call per (client arrays, bucket) group ---- #
     # (R, ...) stacked run parameters; each group's per-row params are one
@@ -388,13 +433,27 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int) -> None:
             run.src_acc = float(a[1]) if run.watch_mask.any() else \
                 float("nan")
 
-    # -- phase F: reputation / staleness / logs (host-side, per run) ---- #
-    for run in runs:
-        values, sched, sel, forced = run.plan
-        run.server._finalize_round(t, values, sched, sel, forced,
-                                   run.acc_local, run.acc_test,
-                                   run.g_acc, run.src_acc)
-        run.plan = run.stacked = run.acc_local = run.acc_test = None
+    # -- phase F: reputation / staleness (one batched Eq. 1 call) + logs  #
+    if sweep_ctrl is not None:
+        # state was pulled in phase A and nothing touched it since; update
+        # every run's reputation/ages in one kernel call, push back, then
+        # log per run against the servers' refreshed state
+        ctl.finalize_runs(sweep_ctrl, [run.plan[2] for run in runs],
+                          [run.acc_local for run in runs],
+                          [run.acc_test for run in runs])
+        sweep_ctrl.push([run.server for run in runs])
+        for run in runs:
+            values, sched, sel, forced = run.plan
+            run.server._log_round(t, values, sched, sel, forced,
+                                  run.g_acc, run.src_acc)
+            run.plan = run.stacked = run.acc_local = run.acc_test = None
+    else:
+        for run in runs:
+            values, sched, sel, forced = run.plan
+            run.server._finalize_round(t, values, sched, sel, forced,
+                                       run.acc_local, run.acc_test,
+                                       run.g_acc, run.src_acc)
+            run.plan = run.stacked = run.acc_local = run.acc_test = None
 
 
 def _by_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:

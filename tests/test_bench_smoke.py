@@ -1,8 +1,9 @@
 """Tier-1 gate for benchmarks/bench_round.py: the smoke mode runs a tiny
-instance of both benchmarks (bucketed vs single-pad engine, run_sweep vs
-sequential) with loud internal assertions — a bench regression (engine
-crash, padding-waste regression, sweep/sequential divergence) fails here
-instead of rotting silently until the next manual bench run."""
+instance of the engine, sweep and control-plane benchmarks with loud
+internal assertions — a bench regression (engine crash, padding-waste
+regression, sweep/sequential divergence, host/batched control-plane
+selection mismatch) fails here instead of rotting silently until the
+next manual bench run."""
 import os
 import subprocess
 import sys
@@ -23,8 +24,10 @@ def test_bench_round_smoke():
         timeout=1200)
     assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
     assert "smoke OK" in r.stderr
-    # CSV rows for both engines made it out
+    # CSV rows for both engines + the control-plane bench made it out
     assert any(line.startswith("unbucketed,") for line in
                r.stdout.splitlines())
     assert any(line.startswith("vectorized,") for line in
+               r.stdout.splitlines())
+    assert any(line.startswith("control,") for line in
                r.stdout.splitlines())

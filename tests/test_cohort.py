@@ -176,7 +176,12 @@ def test_degenerate_schedule_log_reflects_forced_participant(engine):
     rng = np.random.default_rng(2)
     cfg = FeelConfig(n_ues=4, n_malicious=0, rounds=1)
     clients = partition(train, cfg.n_ues, rng)
-    server = FeelServer(cfg, clients, test, rng, engine=engine)
+    # control="host": this test stubs wireless.cost, which only the host
+    # oracle calls (the batched plane bisects from precomputed min rates —
+    # its forced-round behaviour is pinned by test_control.py and
+    # test_impossible_deadline_forces_round_with_zero_objective below)
+    server = FeelServer(cfg, clients, test, rng, engine=engine,
+                        control="host")
     # all-infeasible channel draw: every UE costs more than the K-fraction
     # budget, so the scheduler returns the empty schedule
     server.wireless.cost = lambda gains, t_train: np.full(

@@ -67,9 +67,20 @@ def test_value_weights():
 
 def test_adaptive_weights_shift_toward_reputation():
     cfg = FeelConfig()
-    early = adaptive_weights(0, 15, cfg)
-    late = adaptive_weights(14, 15, cfg)
-    assert late.omega_rep > early.omega_rep
-    assert early.omega_div > late.omega_div
+    early_rep, early_div = adaptive_weights(0, 15, cfg)
+    late_rep, late_div = adaptive_weights(14, 15, cfg)
+    assert late_rep > early_rep
+    assert early_div > late_div
     total = cfg.omega_rep + cfg.omega_div
-    assert early.omega_rep + early.omega_div == pytest.approx(total)
+    assert early_rep + early_div == pytest.approx(total)
+
+
+def test_value_omega_override_matches_config():
+    """The allocation-free omega override is the same Eq. 3 as a replaced
+    config (the old adaptive path allocated a FeelConfig per round)."""
+    rep = np.array([0.2, 0.8])
+    div = np.array([0.5, 0.1])
+    cfg = FeelConfig(omega_rep=0.7, omega_div=0.3)
+    np.testing.assert_array_equal(
+        data_quality_value(rep, div, cfg),
+        data_quality_value(rep, div, FeelConfig(), omega=(0.7, 0.3)))

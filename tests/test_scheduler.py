@@ -67,6 +67,54 @@ def test_dqs_single_item_fallback():
     assert s.alpha[1] == pytest.approx(1.0)   # c=2 of K=2 fractions
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(5, 40))
+@settings(max_examples=30, deadline=None)
+def test_packing_policy_invariants_property(seed, k):
+    """Problem (8) invariants for EVERY packing policy on random instances
+    (previously only dqs had property coverage): bandwidth budget (8c/8d),
+    alpha[k] == cost[k]/K for selected UEs, zero bandwidth for unselected,
+    and no infeasible (c > K) UE ever selected (8b)."""
+    rng = np.random.default_rng(seed)
+    values = rng.uniform(0, 2, k)
+    costs = rng.integers(1, k + 2, k)          # k+1 == infeasible
+    gains = rng.uniform(1e-12, 1e-8, k)
+    cfg = _cfg(k)
+    scheds = {
+        "dqs": dqs_schedule(values, costs, cfg),
+        "random": random_schedule(values, costs, cfg, rng),
+        "best_channel": best_channel_schedule(values, costs, cfg, gains),
+        "max_count": max_count_schedule(values, costs, cfg),
+    }
+    for name, s in scheds.items():
+        assert s.alpha.sum() <= 1.0 + 1e-9, name
+        assert np.all((s.alpha >= 0) & (s.alpha <= 1)), name
+        np.testing.assert_allclose(s.alpha[s.x], costs[s.x] / k,
+                                   err_msg=name)
+        assert np.all(s.alpha[~s.x] == 0), name
+        assert not np.any(s.x[costs > k]), name
+        # objective only credits selected UEs
+        assert s.objective() == pytest.approx(float(values[s.x].sum()))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(5, 40))
+@settings(max_examples=20, deadline=None)
+def test_top_value_policy_invariants_property(seed, k):
+    """top_value ignores the wireless constraint by design (§V-B.1): it
+    must still select exactly n UEs, split the band uniformly among them,
+    and report the REAL Eq. 9 costs."""
+    rng = np.random.default_rng(seed)
+    values = rng.uniform(0, 2, k)
+    costs = rng.integers(1, k + 2, k)
+    n = int(rng.integers(1, k + 1))
+    s = top_value_schedule(values, costs, _cfg(k), n)
+    assert s.x.sum() == n
+    assert s.alpha.sum() == pytest.approx(1.0)
+    np.testing.assert_allclose(s.alpha[s.x], 1.0 / n)
+    np.testing.assert_array_equal(s.cost, costs)
+    assert s.objective() == pytest.approx(
+        float(np.sort(values)[-n:].sum()))
+
+
 def test_all_policies_feasible():
     k = 20
     rng = np.random.default_rng(0)

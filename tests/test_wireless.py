@@ -1,10 +1,12 @@
-"""Wireless model (paper Eq. 4-7, 9) properties."""
+"""Wireless model (paper Eq. 4-7, 9) properties, including the O(K log K)
+monotone-bisection cost against the exhaustive (K, K) scan oracle."""
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
+from jax.experimental import enable_x64
 
 from repro.configs.base import FeelConfig
-from repro.core.wireless import WirelessModel, dbm_to_watt
+from repro.core.wireless import WirelessModel, cost_bisect, dbm_to_watt
 
 
 def _wm(seed=0, **kw):
@@ -67,3 +69,65 @@ def test_deadline_violation_infeasible():
     tt = np.full(cfg.n_ues, cfg.deadline_s + 1.0)
     costs = wm.cost(wm.draw_channels().gains, tt)
     assert np.all(costs == cfg.n_ues + 1)
+
+
+def _random_cost_instance(seed, k):
+    """Random gains/deadlines with the Eq. 9 edges forced in: blown
+    deadlines (t_train >= T -> r_min = inf), near-deadline stragglers, and
+    a boosted-gain row that should resolve at c = 1."""
+    cfg = FeelConfig(n_ues=k)
+    rng = np.random.default_rng(seed)
+    wm = WirelessModel(cfg, rng)
+    gains = wm.draw_channels().gains
+    sizes = rng.integers(1, 31, k) * 50.0
+    cpu = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, k)
+    tt = wm.train_time(sizes, cpu)
+    tt[0] = cfg.deadline_s                 # exactly blown (slack == 0)
+    tt[1] = cfg.deadline_s + 1.0           # blown
+    tt[2] = cfg.deadline_s * (1 - 1e-6)    # near-blown straggler
+    gains[3] = gains.max() * 1e3           # excellent channel
+    return cfg, wm, gains, tt
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([7, 23, 50, 211]))
+@settings(max_examples=25, deadline=None)
+def test_cost_bisection_equals_exhaustive_scan(seed, k):
+    """Eq. 9 bisection == the dense (K, K) scan, EXACTLY, on random
+    instances including the infeasible (c = K+1) and blown-deadline
+    (t_train >= T) edges."""
+    cfg, wm, gains, tt = _random_cost_instance(seed, k)
+    bisected = wm.cost(gains, tt)
+    scanned = wm.cost_scan(gains, tt)
+    np.testing.assert_array_equal(bisected, scanned)
+    assert bisected[0] == k + 1 and bisected[1] == k + 1
+    assert np.all((bisected >= 1) & (bisected <= k + 1))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([7, 50, 211]))
+@settings(max_examples=15, deadline=None)
+def test_cost_bisect_jnp_matches_numpy(seed, k):
+    """The jnp twin (batched control plane) reproduces the numpy bisection
+    exactly in float64, same edges included."""
+    cfg, wm, gains, tt = _random_cost_instance(seed, k)
+    with enable_x64():
+        jc = np.asarray(cost_bisect(
+            gains, np.asarray(wm.min_rate(tt)), k, cfg.bandwidth_hz,
+            cfg.p_watt, cfg.n0_watt_hz))
+    np.testing.assert_array_equal(jc, wm.cost(gains, tt))
+
+
+def test_cost_bisect_jnp_batched_axes():
+    """cost_bisect accepts leading batch (run) axes — the (R, K) layout the
+    control plane feeds it."""
+    cfg, wm, gains, tt = _random_cost_instance(0, 23)
+    r_min = np.asarray(wm.min_rate(tt))
+    with enable_x64():
+        single = np.asarray(cost_bisect(
+            gains, r_min, 23, cfg.bandwidth_hz, cfg.p_watt,
+            cfg.n0_watt_hz))
+        stacked = np.asarray(cost_bisect(
+            np.stack([gains, gains * 2.0]), np.stack([r_min, r_min]), 23,
+            cfg.bandwidth_hz, cfg.p_watt, cfg.n0_watt_hz))
+    np.testing.assert_array_equal(stacked[0], single)
+    feas = single <= 23
+    assert np.all(stacked[1][feas] <= single[feas])   # better channel
