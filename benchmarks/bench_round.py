@@ -7,6 +7,7 @@ cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
     PYTHONPATH=src python -m benchmarks.bench_round --sweep        # run_sweep
     PYTHONPATH=src python -m benchmarks.bench_round --control \
         --ks 50 500 2000                        # host vs batched control plane
+    PYTHONPATH=src python -m benchmarks.bench_round --attacks      # threat plane
     PYTHONPATH=src python -m benchmarks.bench_round --smoke        # CI gate
 
 Methodology — each (engine, K) measurement runs the §V unit of work in a
@@ -35,6 +36,14 @@ phase (Eq. 2/3 values -> Eq. 9 costs -> policy selection) of a
 ``--ks``, asserts the two planes pick identical UEs, and writes the rows
 to ``results/BENCH_control.json`` (the control-plane perf trajectory).
 
+``--attacks`` measures the threat-model plane: the masked batched
+``_apply_attacks`` (one masked tree_map) vs the replaced
+per-malicious-client ``.at[i].set`` dispatch loop at growing n_malicious
+(bit-equality asserted; the masked path must be flat, the loop linear),
+plus a 4-scenario heterogeneous ``run_sweep`` (label flip, feature noise,
+free-rider, sign-flip) stacked vs sequential — written to
+``results/BENCH_attacks.json``.
+
 ``--smoke`` runs a tiny instance of both benchmarks with loud assertions
 (bucketed padding waste must not exceed the single-pad waste; curves must
 be finite) — wired into tier-1 via tests/test_bench_smoke.py so bench
@@ -50,6 +59,8 @@ import os
 import subprocess
 import sys
 import time
+
+import numpy as np
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -197,6 +208,83 @@ print(json.dumps({"host_scan_ms": t_scan / scan_rounds * 1e3,
                   "batched_ms": t_batched / rounds * 1e3}))
 """
 
+_ATTACKS_WORKER = r"""
+import json, sys, time
+import numpy as np, jax, jax.numpy as jnp
+
+mode = sys.argv[1]
+if mode == "apply":
+    # masked batched _apply_attacks vs the per-client .at[i].set oracle:
+    # the masked path must be O(1) in n_malicious; the oracle dispatches
+    # one tree_map per malicious client. Bit-equality asserted per size.
+    from repro.core import attacks as atk
+    from repro.models.mlp import mlp_init
+
+    n_rows, reps = int(sys.argv[2]), int(sys.argv[3])
+    params = mlp_init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    leaves, treedef = jax.tree.flatten(params)
+    stacked = jax.tree.unflatten(treedef, [
+        jnp.asarray(rng.normal(size=(n_rows,) + l.shape)
+                    .astype(np.float32)) for l in leaves])
+    attack = atk.ModelAttack(scale=-1.0)
+
+    def oracle(mal):
+        out = stacked
+        for i in np.flatnonzero(mal):
+            poisoned = attack.apply_host(
+                params, jax.tree.map(lambda l, i=int(i): l[i], out))
+            out = jax.tree.map(lambda l, p, i=int(i): l.at[i].set(p),
+                               out, poisoned)
+        return out
+
+    def sync(t):
+        jax.block_until_ready(jax.tree.leaves(t))
+        return t
+
+    rows = []
+    for n_mal in sorted({1, 4, 16, n_rows // 2}):
+        mal = np.zeros(n_rows, bool)
+        mal[:n_mal] = True
+        a = sync(attack.apply_stacked(stacked, params, mal))
+        b = sync(oracle(mal))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                "masked/oracle attack application mismatch"
+        for _ in range(3):                       # dispatch-cache warmup
+            sync(attack.apply_stacked(stacked, params, mal))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sync(attack.apply_stacked(stacked, params, mal))
+        t_masked = (time.perf_counter() - t0) / reps * 1e3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sync(oracle(mal))
+        t_loop = (time.perf_counter() - t0) / reps * 1e3
+        rows.append({"n_malicious": n_mal, "loop_ms": round(t_loop, 3),
+                     "masked_ms": round(t_masked, 3)})
+    print(json.dumps({"apply": rows}))
+else:
+    # heterogeneous scenario sweep: 4 distinct threat models, stacked in
+    # ONE run_sweep vs sequential (fresh subprocess per mode, cold jit —
+    # the same methodology as --sweep); accs returned for the parent's
+    # cross-mode divergence assertion.
+    from repro.federated.simulation import run_sweep
+
+    n_train, rounds = int(sys.argv[2]), int(sys.argv[3])
+    scns = ["flip_6to2", "noise_0.8", "free_rider", "sign_flip"]
+    n_test = max(n_train // 10, 200)
+    t0 = time.perf_counter()
+    res = run_sweep(["dqs"], seeds=[0], scenarios=scns, n_train=n_train,
+                    n_test=n_test, rounds=rounds,
+                    stack_runs=(mode == "sweep_stacked"))
+    el = time.perf_counter() - t0
+    accs = [r["acc"] for r in res.runs]
+    assert all(np.isfinite(a).all() for a in map(np.asarray, accs))
+    print(json.dumps({"s_total": round(el, 2), "n_scenarios": len(scns),
+                      "accs": accs}))
+"""
+
 # engine CLI name -> (FeelServer engine, n_buckets override or None)
 ENGINES = {"loop": ("loop", None),
            "vectorized": ("vectorized", None),
@@ -307,6 +395,50 @@ def bench_control(ks, n_runs, rounds, write_json=True):
     return rows
 
 
+ATTACK_DEFAULTS = (64, 50, 4000, 3)   # n_rows, reps, n_train, rounds
+
+
+def bench_attacks(n_rows=64, reps=50, n_train=4000, rounds=3,
+                  write_json=True):
+    """Threat-model plane bench: (1) the masked batched ``_apply_attacks``
+    vs the replaced per-malicious-client ``.at[i].set`` dispatch loop at
+    growing n_malicious (bit-equality asserted in the worker — the masked
+    path must be flat in n_malicious, the loop linear), and (2) a
+    4-scenario heterogeneous sweep, stacked vs sequential.
+
+    The JSON artifact (results/BENCH_attacks.json) is only written for
+    the canonical default sizes."""
+    out = _run_worker(_ATTACKS_WORKER, ["apply", n_rows, reps])
+    print("attacks,n_rows,n_malicious,loop_ms,masked_ms,speedup")
+    for r in out["apply"]:
+        print(f"attacks,{n_rows},{r['n_malicious']},{r['loop_ms']:.3f},"
+              f"{r['masked_ms']:.3f},"
+              f"{r['loop_ms'] / r['masked_ms']:.2f}", flush=True)
+    res = {m: _run_worker(_ATTACKS_WORKER, [m, n_train, rounds])
+           for m in ("sweep_stacked", "sweep_sequential")}
+    for a, b in zip(res["sweep_stacked"]["accs"],
+                    res["sweep_sequential"]["accs"]):
+        assert np.allclose(a, b, atol=1e-7), \
+            "stacked/sequential scenario-sweep divergence"
+    sw = {"n_scenarios": res["sweep_stacked"]["n_scenarios"],
+          "stacked_s": res["sweep_stacked"]["s_total"],
+          "sequential_s": res["sweep_sequential"]["s_total"]}
+    print("attacks_sweep,n_scenarios,stacked_s,sequential_s,speedup")
+    print(f"attacks_sweep,{sw['n_scenarios']},{sw['stacked_s']:.2f},"
+          f"{sw['sequential_s']:.2f},"
+          f"{sw['sequential_s'] / sw['stacked_s']:.2f}", flush=True)
+    out["sweep"] = sw
+    if write_json and (n_rows, reps, n_train, rounds) == ATTACK_DEFAULTS:
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_attacks.json")
+        with open(path, "w") as f:
+            json.dump({"bench": "threat_model_plane",
+                       "apply_unit": "ms_per_application",
+                       "apply": out["apply"], "sweep": sw}, f, indent=2)
+        print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+    return out
+
+
 def smoke():
     """Tiny end-to-end run of both benchmarks with loud assertions.
 
@@ -325,9 +457,17 @@ def smoke():
     # batched selections for all five policies) is the actual gate
     ctl_rows = bench_control([50], n_runs=6, rounds=3, write_json=False)
     assert all(r["host_ms"] > 0 and r["batched_ms"] > 0 for r in ctl_rows)
+    # threat-model plane: the worker asserts masked == per-client-loop
+    # attack application bitwise and stacked == sequential scenario sweep
+    atk_out = bench_attacks(n_rows=16, reps=3, n_train=2500, rounds=2,
+                            write_json=False)
+    assert all(r["masked_ms"] > 0 for r in atk_out["apply"])
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
-          f"control speedup {ctl_rows[0]['speedup']:.2f}x", file=sys.stderr)
+          f"control speedup {ctl_rows[0]['speedup']:.2f}x, "
+          f"attack apply masked {atk_out['apply'][-1]['masked_ms']:.2f}ms "
+          f"vs loop {atk_out['apply'][-1]['loop_ms']:.2f}ms",
+          file=sys.stderr)
 
 
 def main():
@@ -355,12 +495,20 @@ def main():
     ap.add_argument("--control-runs", type=int, default=12,
                     help="number of stacked runs for --control (a 'sweep' "
                          "of ~ policies x seeds)")
+    ap.add_argument("--attacks", action="store_true",
+                    help="benchmark the threat-model plane: masked batched "
+                         "attack application vs the per-malicious-client "
+                         "dispatch loop, plus a 4-scenario heterogeneous "
+                         "sweep; writes results/BENCH_attacks.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny asserted run of both benchmarks (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.attacks:
+        bench_attacks(*ATTACK_DEFAULTS)
         return
     if args.control:
         bench_control(args.ks, args.control_runs, max(args.rounds, 3))

@@ -24,6 +24,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.base import FeelConfig
+from repro.core import attacks as atk
 from repro.federated.simulation import run_sweep
 
 OMEGAS = [("div_only", (0.0, 1.0)), ("rep_only", (1.0, 0.0)),
@@ -31,12 +32,13 @@ OMEGAS = [("div_only", (0.0, 1.0)), ("rep_only", (1.0, 0.0)),
 PAIRS = [("easy_6to2", (6, 2)), ("hard_8to4", (8, 4))]
 
 
-def curves(policies, pair, omega, cfg, seeds, no_attack=False, **kw):
-    """One batched sweep over (policies x seeds); per-policy seed-averaged
-    summaries. All seeds (and policies) of a setting run as stacked
-    cohorts — one vmapped train/eval call per size bucket per round."""
-    res = run_sweep(policies, seeds=seeds, attack_pairs=[pair], cfg=cfg,
-                    omega=omega, no_attack=no_attack, **kw)
+def curves(policies, scenario, omega, cfg, seeds, **kw):
+    """One batched sweep over (policies x seeds) of one threat scenario;
+    per-policy seed-averaged summaries. All seeds (and policies) of a
+    setting run as stacked cohorts — one vmapped train/eval call per size
+    bucket per round."""
+    res = run_sweep(policies, seeds=seeds, scenarios=[scenario], cfg=cfg,
+                    omega=omega, **kw)
     out = {}
     for policy in policies:
         runs = res.select(policy=policy)
@@ -45,18 +47,30 @@ def curves(policies, pair, omega, cfg, seeds, no_attack=False, **kw):
                     for a in res.mean_curve("acc", policy=policy)],
             "source_acc": [round(float(a), 4) for a in
                            res.mean_curve("source_acc", policy=policy)],
+            "attack_success": [round(float(a), 4) for a in
+                               res.mean_curve("attack_success",
+                                              policy=policy)],
             "malicious_selected_mean":
                 [round(float(m), 2) for m in
                  res.mean_curve("malicious_selected", policy=policy)],
+            "recovery_rounds": [r["recovery_rounds"] for r in runs],
             "rep_gap": round(float(np.mean(
                 [r["final_reputation_honest"]
                  - r["final_reputation_malicious"] for r in runs])), 4)}
     return out
 
 
-def curve(policy, pair, omega, cfg, seeds, no_attack=False, **kw):
-    return curves([policy], pair, omega, cfg, seeds,
-                  no_attack=no_attack, **kw)[policy]
+def curve(policy, scenario, omega, cfg, seeds, **kw):
+    return curves([policy], scenario, omega, cfg, seeds, **kw)[policy]
+
+
+def _flip(pair):
+    return atk.label_flip(*pair)
+
+
+def _control(pair, tag):
+    """Benign control that still watches the would-be pair's metrics."""
+    return atk.AttackScenario(f"none_{tag}", watch=pair)
 
 
 def main():
@@ -82,22 +96,24 @@ def main():
     for pair_tag, pair in PAIRS:
         # no-attack control: quantifies the damage the flip causes
         key = f"control_{pair_tag}_no_attack"
-        results[key] = curve("dqs", pair, (0.5, 0.5), None, seeds,
-                             no_attack=True, **kw)
+        results[key] = curve("dqs", _control(pair, pair_tag), (0.5, 0.5),
+                             None, seeds, **kw)
         print(f"{key}: {results[key]['acc']} src={results[key]['source_acc']}")
         for om_tag, omega in OMEGAS:
             key = f"fig2_{pair_tag}_{om_tag}"
-            results[key] = curve("top_value", pair, omega, None, seeds, **kw)
+            results[key] = curve("top_value", _flip(pair), omega, None,
+                                 seeds, **kw)
             print(f"{key}: {results[key]['acc']}")
         for regime, bits in [("paper_100KB", 100e3 * 8),
                              ("constrained_5MB", 5e6 * 8)]:
             cfg = FeelConfig(model_size_bits=bits)
             for om_tag, omega in OMEGAS:
                 key = f"fig3_{pair_tag}_{regime}_{om_tag}"
-                results[key] = curve("dqs", pair, omega, cfg, seeds, **kw)
+                results[key] = curve("dqs", _flip(pair), omega, cfg,
+                                     seeds, **kw)
                 print(f"{key}: {results[key]['acc']}")
         # baselines for context — one batched sweep over all three policies
-        base = curves(["random", "best_channel", "max_count"], pair,
+        base = curves(["random", "best_channel", "max_count"], _flip(pair),
                       (0.5, 0.5), FeelConfig(model_size_bits=5e6 * 8),
                       seeds, **kw)
         for pol, summary in base.items():

@@ -1,11 +1,11 @@
-"""Beyond-paper robustness extensions (the paper's §VI future-work items):
-
-  1. MODEL poisoning (sign-flip / boosted updates) instead of data poisoning —
-     does Eq. 1's test-set evaluation still catch the attacker?
-  2. Dishonest accuracy reporting (lie_boost) — the beta1 term's target.
-  3. Adaptive omega schedule (core.quality.adaptive_weights) vs fixed
-     omega1=omega2 — implements the paper's own §V-B.2 suggestion.
-  4. Scale: K=100 UEs (paper §VI: "larger number of UEs").
+"""Beyond-paper robustness extensions (the paper's §VI future-work items),
+now a threat-model MATRIX: every scenario family from core/attacks.py —
+model poisoning (sign-flip / boosted), free-riders (zero and stale
+updates), dishonest reporting on top of a label flip, feature noise, and
+intermittent / colluding malicious schedules — runs against DQS and the
+random baseline as ONE stacked ``run_sweep`` (scenarios are just another
+slice of the batched cohort + control planes). Plus the original
+adaptive-omega and K=100 scale studies.
 
     PYTHONPATH=src python examples/robustness_extensions.py [--fast]
 
@@ -23,7 +23,50 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.base import FeelConfig
-from repro.federated.simulation import run_experiment
+from repro.core import attacks as atk
+from repro.federated.simulation import run_experiment, run_sweep
+
+WATCH = (8, 4)        # the hard pair: all scenario metrics watch it
+
+
+def _w(scenario, tag):
+    """Rename + point the scenario's metrics at the hard pair."""
+    return dataclasses.replace(scenario, name=tag, watch=WATCH)
+
+
+SCENARIO_MATRIX = [
+    _w(atk.model_poison(-1.0), "model_poison_signflip"),
+    _w(atk.model_poison(4.0), "model_poison_boost4"),
+    _w(atk.free_rider(0), "free_rider"),
+    _w(atk.free_rider(2), "stale_rider"),
+    _w(atk.lie_boost(0.3, data=atk.LabelFlip((WATCH,))), "lying_flip"),
+    _w(atk.feature_noise(0.8), "feature_noise"),
+    _w(atk.intermittent(atk.model_poison(-1.0), period=2),
+       "intermittent_signflip"),
+    _w(atk.colluding(atk.model_poison(-1.0), period=2),
+       "colluding_signflip"),
+    atk.AttackScenario("control", watch=WATCH),      # benign baseline
+]
+
+
+def summarize(res, scenario, policy):
+    runs = res.select(scenario=scenario, policy=policy)
+    out = {
+        "acc": [round(float(a), 4) for a in
+                np.mean([r["acc"] for r in runs], 0)],
+        "attack_success": [round(float(a), 4) for a in
+                           np.mean([r["attack_success"] for r in runs], 0)],
+        "recovery_rounds": [r["recovery_rounds"] for r in runs],
+        "rep_gap": round(float(np.mean(
+            [r["final_reputation_honest"] - r["final_reputation_malicious"]
+             for r in runs])), 4),
+        "malicious_selected_mean": [round(float(m), 2) for m in np.mean(
+            [r["malicious_selected"] for r in runs], 0)],
+    }
+    tag = f"{scenario}_{policy}"
+    print(f"{tag:40s} acc={out['acc'][-1]:.3f} repgap={out['rep_gap']:+.3f} "
+          f"malsel_last={out['malicious_selected_mean'][-1]}")
+    return out
 
 
 def curve(tag, seeds, **kw):
@@ -52,37 +95,31 @@ def main():
     results = {}
     t0 = time.time()
 
-    # 1) model poisoning: sign-flip and boosted
-    for scale, tag in [(-1.0, "signflip"), (4.0, "boost4")]:
-        results[f"model_poison_{tag}_dqs"] = curve(
-            f"model_poison_{tag}_dqs", seeds, policy="dqs",
-            attack_pair=(8, 4), cfg=cfg5, model_poison_scale=scale, **kw)
-        results[f"model_poison_{tag}_random"] = curve(
-            f"model_poison_{tag}_random", seeds, policy="random",
-            attack_pair=(8, 4), cfg=cfg5, model_poison_scale=scale, **kw)
-    results["model_poison_control"] = curve(
-        "model_poison_control", seeds, policy="dqs", attack_pair=(8, 4),
-        cfg=cfg5, no_attack=True, **kw)
+    # 1) the whole threat-model matrix x {dqs, random} in ONE stacked
+    # sweep: 9 scenarios x 2 policies x 2 seeds = 36 runs, scheduled by
+    # one batched control-plane call and trained as stacked cohorts
+    res = run_sweep(["dqs", "random"], seeds=seeds,
+                    scenarios=SCENARIO_MATRIX, cfg=cfg5, **kw)
+    for scn in SCENARIO_MATRIX:
+        for policy in ("dqs", "random"):
+            results[f"{scn.name}_{policy}"] = summarize(
+                res, scn.name, policy)
 
-    # 2) dishonest reporting: label flip + inflated self-reported accuracy
-    for boost in (0.0, 0.3):
-        results[f"lie_{boost}"] = curve(
-            f"lie_boost_{boost}", seeds, policy="dqs", attack_pair=(8, 4),
-            cfg=cfg5, lie_boost=boost, **kw)
-
-    # 3) adaptive omega vs fixed
+    # 2) adaptive omega vs fixed (paper §V-B.2 suggestion)
     results["fixed_omega"] = curve(
-        "fixed_omega", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg5, **kw)
+        "fixed_omega", seeds, policy="dqs", attack_pair=WATCH, cfg=cfg5,
+        **kw)
     results["adaptive_omega"] = curve(
-        "adaptive_omega", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg5,
+        "adaptive_omega", seeds, policy="dqs", attack_pair=WATCH, cfg=cfg5,
         adaptive_omega=True, **kw)
 
-    # 4) scale: K=100 UEs, 10 malicious
+    # 3) scale: K=100 UEs, 10 malicious
     cfg100 = dataclasses.replace(cfg5, n_ues=100, n_malicious=10)
     results["k100_dqs"] = curve(
-        "k100_dqs", seeds, policy="dqs", attack_pair=(8, 4), cfg=cfg100, **kw)
+        "k100_dqs", seeds, policy="dqs", attack_pair=WATCH, cfg=cfg100,
+        **kw)
     results["k100_random"] = curve(
-        "k100_random", seeds, policy="random", attack_pair=(8, 4),
+        "k100_random", seeds, policy="random", attack_pair=WATCH,
         cfg=cfg100, **kw)
 
     os.makedirs("results", exist_ok=True)

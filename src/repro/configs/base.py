@@ -281,6 +281,10 @@ class FeelConfig:
     # test gap, the stronger poisoning signal (see EXPERIMENTS.md)
     beta1: float = 0.2            # weight of (acc_local - avg_acc)
     beta2: float = 0.8            # weight of (acc_local - acc_test)
+    # threat-model metrics (core/attacks.py): the attacked class counts as
+    # recovered once the source->target attack success rate stays below
+    # this threshold (feeds ``recovery_rounds``)
+    recovery_threshold: float = 0.5
     # client compute model (Eq. 6). zeta/f are unspecified in the paper;
     # calibrated so t_train spans [~1s, ~375s] against T=300s — large datasets
     # on slow UEs can blow the deadline, which is exactly the paper's

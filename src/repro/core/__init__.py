@@ -2,10 +2,20 @@
 
 diversity (Eq. 2) + reputation (Eq. 1) -> data-quality value (Eq. 3);
 wireless cost model (Eq. 4-7, 9); greedy-knapsack scheduler (Algorithm 2)
-with baseline policies; label-flip poisoning (§III-B.1); batched JAX
-control plane (core/control.py) scheduling all runs of a sweep in one
-vmapped call, with the numpy implementations as the bit-parity oracle.
+with baseline policies; label-flip poisoning (§III-B.1) generalized to a
+pluggable threat-model plane (core/attacks.py: scenario registry, masked
+batched application, host oracles); batched JAX control plane
+(core/control.py) scheduling all runs of a sweep in one vmapped call,
+with the numpy implementations as the bit-parity oracle.
 """
+from repro.core.attacks import (SCENARIOS, AttackScenario, FeatureNoise,
+                                LabelFlip, MaliciousSchedule, ModelAttack,
+                                NO_ATTACK, ReportAttack, as_scenario,
+                                colluding, feature_noise, free_rider,
+                                intermittent, label_flip, legacy_scenario,
+                                lie_boost, model_poison, multi_flip,
+                                recovery_rounds, register,
+                                reputation_gap)
 from repro.core.control import (ControlState, finalize_runs, schedule_runs)
 from repro.core.diversity import (diversity_index, diversity_index_eq2,
                                   diversity_index_rows, gini_simpson,
@@ -26,6 +36,12 @@ from repro.core.wireless import (ChannelState, WirelessModel, cost_bisect,
                                  dbm_to_watt, rate_eq4)
 
 __all__ = [
+    "SCENARIOS", "AttackScenario", "FeatureNoise", "LabelFlip",
+    "MaliciousSchedule", "ModelAttack", "NO_ATTACK", "ReportAttack",
+    "as_scenario", "colluding", "feature_noise", "free_rider",
+    "intermittent", "label_flip", "legacy_scenario", "lie_boost",
+    "model_poison", "multi_flip", "recovery_rounds", "register",
+    "reputation_gap",
     "ControlState", "finalize_runs", "schedule_runs",
     "diversity_index", "diversity_index_eq2", "diversity_index_rows",
     "gini_simpson", "normalize", "normalize_last", "normalize_rows",

@@ -1,0 +1,484 @@
+"""Threat-model plane: pluggable attack scenarios (paper §III-B, §V, §VI).
+
+The paper's evaluation is entirely about how DQS behaves under data
+poisoning (§V, Fig. 2-3), and its §VI future work plus the related
+scheduling literature (arXiv:2102.09491 — unreliable/noisy data;
+arXiv:2004.00490 — importance/channel awareness with stale clients) frame
+the wider scenario families the reputation term is supposed to absorb.
+The seed hard-coded ONE of them: a full label flip on a single
+``(source, target)`` pair, with model poisoning bolted on as a scalar
+flag. This module turns the threat model into a first-class axis:
+
+    AttackScenario — a named bundle of four orthogonal components:
+        data     DataAttack        poisons a malicious UE's raw ``(x, y)``
+                                   at partition time (label flips with
+                                   pair x fraction x multi-pair, feature
+                                   noise)
+        model    ModelAttack       manipulates the *uploaded update*
+                                   (sign-flip, boosted, free-rider,
+                                   stale replay)
+        report   ReportAttack      inflates the self-reported accuracy
+                                   (the beta1 term's target)
+        schedule MaliciousSchedule WHEN malicious UEs act: always,
+                                   intermittent duty cycles, or a
+                                   colluding round-robin rotation where
+                                   subsets take turns so each member's
+                                   reputation decays slowly
+
+Every component has a host numpy oracle — the per-client path, used by
+the ``engine="loop"`` oracle and by ``partition`` — AND a batched jnp
+twin that applies to a stacked cohort through a malicious-row mask in ONE
+masked ``jax.tree.map`` / ``jnp.where`` (no per-malicious-client
+dispatch; ``FeelServer._apply_attacks`` routes through it, and the old
+``.at[i].set`` loop survives as the pinned parity oracle).
+
+Randomness follows DESIGN.md §2: every draw comes from a host numpy
+``Generator`` (the stream of record) and the batched twins are
+deterministic functions of those draws — draws are quantized to float32
+so both planes sort/compare identical values, which is what makes oracle
+parity exact. Scenario registry + metrics helpers (attack success rate,
+recovery rounds) live at the bottom.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pair = Tuple[int, int]
+
+
+# ---------------------------------------------------------------------- #
+# Data attacks (partition-time, raw client data)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class LabelFlip:
+    """Label-flipping (paper §III-B.1), generalized: multiple
+    ``(source, target)`` pairs and a per-class flip fraction.
+
+    ``flip_fraction < 1`` flips exactly ``round(flip_fraction * n_source)``
+    of each source class's samples — the ones with the smallest uniform
+    draws (stable ranking), so the host oracle and the jnp twin pick the
+    identical set from the same draws. Pairs are resolved against the
+    ORIGINAL labels, so chained pairs like (6,2),(2,8) never cascade.
+    """
+    pairs: Tuple[Pair, ...]
+    flip_fraction: float = 1.0
+
+    def __post_init__(self):
+        pairs = tuple((int(s), int(t)) for s, t in self.pairs)
+        object.__setattr__(self, "pairs", pairs)
+        sources = [s for s, _ in pairs]
+        assert len(set(sources)) == len(sources), \
+            f"duplicate source classes in {pairs}"
+        assert 0.0 < self.flip_fraction <= 1.0, self.flip_fraction
+
+    # -- host oracle ---------------------------------------------------- #
+    def draw(self, rng: np.random.Generator, x: np.ndarray,
+             y: np.ndarray) -> Optional[np.ndarray]:
+        """Per-sample float32 uniforms; None (no stream consumed) for a
+        full flip — keeps the legacy ``flip_fraction=1`` RNG stream
+        identical to the seed's LabelFlipAttack."""
+        if self.flip_fraction >= 1.0:
+            return None
+        return rng.random(len(y), dtype=np.float32)
+
+    def _n_flip(self, n_source: int) -> int:
+        return int(np.round(self.flip_fraction * float(n_source)))
+
+    def apply_host(self, x: np.ndarray, y: np.ndarray,
+                   u: Optional[np.ndarray]):
+        out = y.copy()
+        for s, t in self.pairs:
+            src = np.flatnonzero(y == s)          # original labels
+            if u is not None:
+                n = self._n_flip(src.size)
+                if n < src.size:
+                    order = np.argsort(u[src], kind="stable")
+                    src = src[order[:n]]
+            out[src] = t
+        return x, out
+
+    def poison(self, x, y, rng):
+        """Partition entry point: draw + apply in one call."""
+        return self.apply_host(x, y, self.draw(rng, x, y))
+
+    # -- batched jnp twin ----------------------------------------------- #
+    def apply_rows(self, x, y, valid, mal, u=None):
+        """Stacked twin over (K, S) padded client arrays.
+
+        x (K, S, D); y (K, S) int; valid (K, S) {0,1} real-sample mask;
+        mal (K,) bool malicious rows; u (K, S) float32 draws (row k =
+        ``draw`` output for client k, zero-padded). One ``jnp.where`` per
+        flip pair — no per-client dispatch.
+        """
+        y = jnp.asarray(y)
+        y0 = y
+        mal_col = jnp.asarray(mal, bool)[:, None]
+        valid_b = jnp.asarray(valid) > 0
+        for s, t in self.pairs:
+            is_src = (y0 == s) & valid_b
+            if u is None:
+                flip = is_src
+            else:
+                # host-computed round() table keeps the f64 threshold
+                # arithmetic identical between the planes
+                S = y.shape[-1]
+                table = jnp.asarray(np.round(
+                    self.flip_fraction * np.arange(S + 1, dtype=np.float64)
+                ).astype(np.int32))
+                n_flip = table[is_src.sum(-1)]
+                key = jnp.where(is_src, jnp.asarray(u), jnp.inf)
+                order = jnp.argsort(key, axis=-1, stable=True)
+                rank = jnp.argsort(order, axis=-1, stable=True)
+                flip = is_src & (rank < n_flip[:, None])
+            y = jnp.where(mal_col & flip, t, y)
+        return jnp.asarray(x), y
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureNoise:
+    """Unreliable-data scenario (cf. arXiv:2102.09491): additive Gaussian
+    pixel noise on a malicious/faulty UE's features; labels untouched, so
+    the UE's reported histogram — and Eq. 2 diversity — stay truthful and
+    only the Eq. 1 test-set gap can catch it."""
+    sigma: float = 0.8
+    clip: Tuple[float, float] = (0.0, 1.0)   # the data domain of x
+
+    def draw(self, rng: np.random.Generator, x: np.ndarray,
+             y: np.ndarray) -> np.ndarray:
+        return rng.standard_normal(x.shape).astype(np.float32)
+
+    def apply_host(self, x, y, eps):
+        noisy = np.clip(x + np.float32(self.sigma) * eps,
+                        *self.clip).astype(np.float32)
+        return noisy, y
+
+    def poison(self, x, y, rng):
+        return self.apply_host(x, y, self.draw(rng, x, y))
+
+    def apply_rows(self, x, y, valid, mal, eps):
+        """Stacked twin: noise lands only on malicious rows' REAL samples
+        (padding stays exactly zero — the cohort engine's contract)."""
+        x = jnp.asarray(x)
+        m = (jnp.asarray(mal, bool)[:, None] & (jnp.asarray(valid) > 0)
+             )[..., None]
+        noisy = jnp.clip(x + jnp.float32(self.sigma) * jnp.asarray(eps),
+                         *self.clip)
+        return jnp.where(m, noisy, x), jnp.asarray(y)
+
+
+DataAttack = Union[LabelFlip, FeatureNoise]
+
+
+# ---------------------------------------------------------------------- #
+# Model attacks (update-time, uploaded parameters)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ModelAttack:
+    """Update manipulation ``Omega' = ref + scale * (Omega - g)``.
+
+    scale = -1 — sign-flip (gradient-ascent) [Bagdasaryan et al.];
+    |scale| > 1 — boosted/backdoor-style amplification;
+    scale = 0 — free-rider: the UE uploads ``ref`` untouched (it never
+        trained). ``staleness = 0`` makes ref the current global model
+        (zero update); ``staleness = s > 0`` replays the global model
+        from s rounds earlier (stale free-rider) — the server keeps the
+        short history (``FeelServer._attack_ref_params``).
+    """
+    scale: float = -1.0
+    staleness: int = 0
+
+    def apply_host(self, global_params, local_params, ref_params=None):
+        """Per-client oracle (the loop engine's path)."""
+        ref = global_params if ref_params is None else ref_params
+        return jax.tree.map(
+            lambda r, g, l: r + self.scale * (l - g),
+            ref, global_params, local_params)
+
+    def apply_stacked(self, stacked, global_params, mal, ref_params=None):
+        """Batched twin: ONE masked ``jax.tree.map`` over the stacked
+        cohort — malicious rows get the manipulated update, honest rows
+        pass through; no per-client dispatch."""
+        ref = global_params if ref_params is None else ref_params
+        m = jnp.asarray(np.asarray(mal, bool))
+
+        def leaf(l, g, r):
+            mm = m.reshape(m.shape + (1,) * (l.ndim - 1))
+            return jnp.where(mm, r + self.scale * (l - g), l)
+
+        return jax.tree.map(leaf, stacked, global_params, ref)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportAttack:
+    """Dishonest accuracy reporting: malicious UEs add ``boost`` to their
+    self-reported local accuracy (clipped to 1) — the quantity Eq. 1's
+    beta1 term treats as suspect."""
+    boost: float = 0.3
+
+    def apply(self, acc_local: np.ndarray, mal: np.ndarray) -> np.ndarray:
+        return np.where(mal, np.minimum(acc_local + self.boost, 1.0),
+                        acc_local)
+
+
+# ---------------------------------------------------------------------- #
+# Activity schedules (WHEN malicious UEs act)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MaliciousSchedule:
+    """Round-dependent activity of the malicious set.
+
+    always       — every malicious UE attacks every round.
+    intermittent — all attack only when ``t % period < duty`` (on-off
+                   duty cycle: reputation partially recovers between
+                   bursts).
+    roundrobin   — colluding rotation: the malicious set splits into
+                   ``period`` groups by rank and group ``t % period``
+                   attacks in round t, so each member poisons only every
+                   period-th round it is scheduled — the collusion
+                   pattern that slows Eq. 1's separation the most.
+
+    Applies to model/report attacks only: data attacks are baked into the
+    partition and cannot vary per round (AttackScenario enforces this).
+    """
+    kind: str = "always"      # always | intermittent | roundrobin
+    period: int = 1
+    duty: int = 1
+
+    def __post_init__(self):
+        assert self.kind in ("always", "intermittent", "roundrobin"), \
+            self.kind
+        assert self.period >= 1 and 1 <= self.duty <= self.period
+
+    def active(self, t: int, mal_mask: np.ndarray,
+               mal_rank: np.ndarray) -> np.ndarray:
+        """(K,) bool — the malicious UEs acting in round ``t``.
+
+        mal_mask — (K,) bool malicious flags; mal_rank — (K,) rank of
+        each UE within the malicious set (-1 for honest UEs).
+        """
+        if self.kind == "always":
+            return mal_mask
+        if self.kind == "intermittent":
+            if t % self.period < self.duty:
+                return mal_mask
+            return np.zeros_like(mal_mask)
+        return mal_mask & (mal_rank % self.period == t % self.period)
+
+
+ALWAYS = MaliciousSchedule()
+
+
+# ---------------------------------------------------------------------- #
+# Scenario: the composite threat model
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AttackScenario:
+    """A named threat model: data/model/report components + activity
+    schedule. Any subset may be None; all-None is the benign control
+    (malicious flags are not even set — matching ``no_attack=True``).
+
+    ``watch`` is the (source, target) pair the metrics track
+    (``source_acc``, attack success rate); it defaults to the data
+    attack's first flip pair and may be set explicitly for scenarios
+    without one (e.g. a benign control curve over the would-be pair).
+    """
+    name: str
+    data: Optional[DataAttack] = None
+    model: Optional[ModelAttack] = None
+    report: Optional[ReportAttack] = None
+    schedule: MaliciousSchedule = ALWAYS
+    watch: Optional[Pair] = None
+
+    def __post_init__(self):
+        if self.data is not None and self.schedule.kind != "always":
+            raise ValueError(
+                "data attacks are applied once at partition time and "
+                "cannot follow a round-dependent schedule "
+                f"(scenario {self.name!r}); schedule model/report "
+                "components instead")
+        if self.watch is None and isinstance(self.data, LabelFlip):
+            object.__setattr__(self, "watch", self.data.pairs[0])
+
+    @property
+    def benign(self) -> bool:
+        return (self.data is None and self.model is None
+                and self.report is None)
+
+    def data_key(self):
+        """Partition-cache identity: runs whose partitions are identical
+        (same labels/features AND same malicious flags) share this key —
+        the sweep builds one partition + device layout per key."""
+        if self.benign:
+            return "none"
+        if self.data is None:
+            return "mal_only"      # clean data, malicious flags set
+        return self.data           # frozen dataclass -> hashable
+
+
+# ---------------------------------------------------------------------- #
+# Registry + builders
+# ---------------------------------------------------------------------- #
+SCENARIOS: Dict[str, AttackScenario] = {}
+
+
+def register(scenario: AttackScenario) -> AttackScenario:
+    assert scenario.name not in SCENARIOS, \
+        f"scenario {scenario.name!r} already registered"
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def label_flip(source: int, target: int, flip_fraction: float = 1.0,
+               name: Optional[str] = None) -> AttackScenario:
+    if name is None:
+        name = f"flip_{source}to{target}"
+        if flip_fraction < 1.0:
+            name += f"_f{int(round(flip_fraction * 100))}"
+    return AttackScenario(name, data=LabelFlip(((source, target),),
+                                               flip_fraction))
+
+
+def multi_flip(pairs, flip_fraction: float = 1.0,
+               name: Optional[str] = None) -> AttackScenario:
+    pairs = tuple(tuple(p) for p in pairs)
+    name = name or ("multi_flip_" + "_".join(f"{s}to{t}"
+                                             for s, t in pairs))
+    return AttackScenario(name, data=LabelFlip(pairs, flip_fraction))
+
+
+def feature_noise(sigma: float = 0.8,
+                  name: Optional[str] = None) -> AttackScenario:
+    return AttackScenario(name or f"noise_{sigma:g}",
+                          data=FeatureNoise(sigma))
+
+
+def free_rider(staleness: int = 0,
+               name: Optional[str] = None) -> AttackScenario:
+    name = name or ("free_rider" if staleness == 0
+                    else f"stale_rider_{staleness}")
+    return AttackScenario(name, model=ModelAttack(0.0, staleness))
+
+
+def model_poison(scale: float,
+                 name: Optional[str] = None) -> AttackScenario:
+    name = name or ("sign_flip" if scale == -1.0 else f"boost_{scale:g}")
+    return AttackScenario(name, model=ModelAttack(scale))
+
+
+def lie_boost(boost: float = 0.3, data: Optional[DataAttack] = None,
+              name: Optional[str] = None) -> AttackScenario:
+    return AttackScenario(name or f"lie_{boost:g}", data=data,
+                          report=ReportAttack(boost))
+
+
+def intermittent(base: AttackScenario, period: int, duty: int = 1,
+                 name: Optional[str] = None) -> AttackScenario:
+    """Wrap a scenario's model/report components in an on-off duty cycle."""
+    return dataclasses.replace(
+        base, name=name or f"{base.name}_int{period}d{duty}",
+        schedule=MaliciousSchedule("intermittent", period, duty))
+
+
+def colluding(base: AttackScenario, period: int,
+              name: Optional[str] = None) -> AttackScenario:
+    """Wrap a scenario in a colluding round-robin rotation."""
+    return dataclasses.replace(
+        base, name=name or f"{base.name}_rr{period}",
+        schedule=MaliciousSchedule("roundrobin", period, period))
+
+
+NO_ATTACK = register(AttackScenario("none"))
+register(label_flip(6, 2))                              # easy pair, §V
+register(label_flip(8, 4, flip_fraction=0.5))           # partial flip
+register(multi_flip(((6, 2), (8, 4))))                  # both §V pairs
+register(feature_noise(0.8))
+register(free_rider(0))                                 # zero update
+register(free_rider(2))                                 # stale replay
+register(model_poison(-1.0))                            # sign flip
+register(model_poison(3.0))                             # boosted
+register(lie_boost(0.3, data=LabelFlip(((8, 4),)),
+                   name="lying_flip_8to4"))
+register(intermittent(model_poison(-1.0), period=2))
+register(colluding(model_poison(-1.0), period=2))
+
+
+def as_scenario(spec) -> AttackScenario:
+    """Coerce a scenario spec: an AttackScenario passes through, a str
+    looks up the registry, and a legacy ``(source, target)`` pair becomes
+    the full label flip the seed hard-coded (back-compat shim for
+    ``run_sweep(attack_pairs=...)`` callers)."""
+    if isinstance(spec, AttackScenario):
+        return spec
+    if isinstance(spec, str):
+        return SCENARIOS[spec]
+    if isinstance(spec, (tuple, list)) and len(spec) == 2:
+        return label_flip(int(spec[0]), int(spec[1]))
+    raise TypeError(f"not an attack scenario spec: {spec!r}")
+
+
+def legacy_scenario(attack_pair: Pair, no_attack: bool = False,
+                    model_poison_scale: Optional[float] = None,
+                    lie_boost_val: float = 0.0) -> AttackScenario:
+    """The seed's knob set as one scenario. Contract (regression-tested in
+    tests/test_attacks.py):
+
+    - ``no_attack=True`` wins over everything: no data attack, no model
+      poisoning, no lie_boost, malicious flags not set;
+    - otherwise ``model_poison_scale`` REPLACES the label-flip data attack
+      (malicious UEs keep clean data and poison their updates instead);
+    - ``lie_boost`` composes with whichever attack is active;
+    - the metrics always watch ``attack_pair`` (even for the benign
+      control, so control curves still report source_acc).
+    """
+    pair = (int(attack_pair[0]), int(attack_pair[1]))
+    if no_attack:
+        return AttackScenario(f"none_watch_{pair[0]}to{pair[1]}",
+                              watch=pair)
+    data = model = None
+    if model_poison_scale is not None:
+        model = ModelAttack(scale=float(model_poison_scale))
+    else:
+        data = LabelFlip((pair,))
+    report = ReportAttack(lie_boost_val) if lie_boost_val else None
+    tag = (f"mp_{model_poison_scale:g}" if model_poison_scale is not None
+           else "flip")
+    if lie_boost_val:
+        tag += f"_lie{lie_boost_val:g}"
+    return AttackScenario(f"legacy_{tag}_{pair[0]}to{pair[1]}",
+                          data=data, model=model, report=report,
+                          watch=pair)
+
+
+# ---------------------------------------------------------------------- #
+# Scenario metrics
+# ---------------------------------------------------------------------- #
+def recovery_rounds(attack_success, threshold: float = 0.5) -> int:
+    """Rounds until the attack stays defeated: ``1 + t_last`` where
+    ``t_last`` is the last round whose attack success rate is >=
+    ``threshold``; 0 if the attack never reached the threshold; -1 when
+    the metric is undefined (no watched source->target pair). A return
+    EQUAL to ``len(attack_success)`` means the final round was still at
+    or above the threshold — the attack was NOT recovered from within
+    the observed horizon (no later round exists to witness recovery);
+    compare against the curve length before reading it as a recovery
+    time."""
+    a = np.asarray(attack_success, float)
+    if a.size == 0 or not np.isfinite(a).any():
+        return -1
+    above = np.flatnonzero(np.nan_to_num(a, nan=-np.inf) >= threshold)
+    return 0 if above.size == 0 else int(above[-1]) + 1
+
+
+def reputation_gap(reputations: np.ndarray, mal_mask: np.ndarray) -> float:
+    """Honest-vs-malicious reputation separation: mean honest reputation
+    minus mean malicious reputation (NaN when either set is empty)."""
+    mal_mask = np.asarray(mal_mask, bool)
+    if not mal_mask.any() or mal_mask.all():
+        return float("nan")
+    return float(np.mean(reputations[~mal_mask])
+                 - np.mean(reputations[mal_mask]))

@@ -13,7 +13,6 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.poisoning import LabelFlipAttack
 from repro.data.synthetic_mnist import Dataset
 
 GROUP_SIZE = 50
@@ -34,7 +33,14 @@ class ClientData:
 
 def partition(train: Dataset, n_ues: int, rng: np.random.Generator,
               malicious: Optional[np.ndarray] = None,
-              attack: Optional[LabelFlipAttack] = None) -> List[ClientData]:
+              attack=None) -> List[ClientData]:
+    """Allocate label-sorted sample groups to K UEs (module docstring).
+
+    ``attack`` poisons each malicious UE's raw data: either a
+    ``core.attacks`` data attack (``poison(x, y, rng) -> (x, y)`` — label
+    flips with pair x fraction x multi-pair, feature noise) or the legacy
+    label-only ``core.poisoning.LabelFlipAttack`` (``apply(y, rng)``).
+    """
     order = np.argsort(train.y, kind="stable")
     n_groups = len(train) // GROUP_SIZE
     groups = order[: n_groups * GROUP_SIZE].reshape(n_groups, GROUP_SIZE)
@@ -54,7 +60,10 @@ def partition(train: Dataset, n_ues: int, rng: np.random.Generator,
         ds = train.subset(idx)
         is_mal = k in mal
         if is_mal and attack is not None:
-            ds = Dataset(ds.x, attack.apply(ds.y, rng))
+            if hasattr(attack, "poison"):       # core.attacks DataAttack
+                ds = Dataset(*attack.poison(ds.x, ds.y, rng))
+            else:                               # legacy label-only attack
+                ds = Dataset(ds.x, attack.apply(ds.y, rng))
         clients.append(ClientData(ue_id=k, data=ds, malicious=is_mal))
     return clients
 

@@ -3,15 +3,18 @@ and the self-reported local accuracy of Alg. 1 line 11.
 
 A malicious UE is not assumed to lie about the *number* it reports — it
 truthfully evaluates on its own poisoned data, which is exactly why the
-paper's Eq. 1 uses the server-side test-set gap to catch it. An optional
-``lie_boost`` models UEs that additionally inflate their report."""
+paper's Eq. 1 uses the server-side test-set gap to catch it. Update- and
+report-level attacks (model poisoning, lie boosting) are NOT applied
+here: the server applies them through the threat-model plane
+(``core/attacks.py`` — ``FeelServer._apply_attacks`` / the loop engine's
+per-client oracle), which is what keeps their activity schedules and
+stale reference params consistent across engines."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
 import jax
-import numpy as np
 
 from repro.data.partition import ClientData
 from repro.models.mlp import mlp_accuracy, mlp_sgd_epoch
@@ -26,20 +29,12 @@ class ClientReport:
 
 
 def local_train(client: ClientData, global_params, epochs: int,
-                lr: float = 0.1, batch_size: int = 50,
-                lie_boost: float = 0.0, model_poison=None) -> ClientReport:
+                lr: float = 0.1, batch_size: int = 50) -> ClientReport:
     x = jax.numpy.asarray(client.data.x)
     y = jax.numpy.asarray(client.data.y)
     params = global_params
     for _ in range(epochs):
         params = mlp_sgd_epoch(params, x, y, lr, batch_size)
     acc = float(mlp_accuracy(params, x, y))
-    if client.malicious and model_poison is not None:
-        # model-poisoning (§VI future work): manipulate the update itself;
-        # the reported local accuracy is still that of the honest-looking
-        # locally-trained model — the lie the server must catch via Eq. 1.
-        params = model_poison.apply(global_params, params)
-    if client.malicious and lie_boost:
-        acc = min(acc + lie_boost, 1.0)
     return ClientReport(ue_id=client.ue_id, params=params,
                         acc_local=acc, n_samples=client.size)

@@ -153,6 +153,22 @@ def cohort_eval(stacked_params, x, y, masks):
     return jax.vmap(one)(stacked_params, masks)
 
 
+@jax.jit
+def cohort_eval_rows(stacked_params, x, y_rows, masks):
+    """``cohort_eval`` with per-row labels: y_rows (N, T).
+
+    The sweep's metric phase uses it to score the attack success rate —
+    a row whose labels are relabelled to the attack's target class over
+    the source-class mask — alongside the plain accuracy rows, in the
+    same vmapped call.
+    """
+    def one(p, yr, m):
+        correct = (jnp.argmax(mlp_apply(p, x), -1) == yr).astype(jnp.float32)
+        return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+    return jax.vmap(one)(stacked_params, y_rows, masks)
+
+
 def unstack(stacked_params, i: int):
     """Extract client ``i``'s parameter pytree from the stacked cohort."""
     return jax.tree.map(lambda l: l[i], stacked_params)

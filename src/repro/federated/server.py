@@ -25,10 +25,18 @@ Two execution engines implement Alg. 1 lines 9-14:
 The padded device-resident client arrays live in a ``CohortData`` that can
 be shared by several servers running on the same (dataset, partition) —
 the batched sweep runner (federated/simulation.py::run_sweep) builds it
-once per (seed, attack-pair) and fans it out across policies.
+once per (seed, data-attack) and fans it out across policies and across
+the scenarios that share the same poisoned data.
+
+Threat model: the server takes an ``core.attacks.AttackScenario``; its
+model/report components apply to the merged cohort stack through ONE
+masked ``tree_map`` (``_apply_attacks``) on the scenario's activity
+schedule — the pre-refactor per-malicious-client dispatch loop survives
+as ``_apply_attacks_oracle``, pinned bit-equal (DESIGN.md §8).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
+from repro.core import attacks as atk
 from repro.core import (ReputationTracker, WirelessModel, adaptive_weights,
                         data_quality_value, diversity_index, dqs_schedule,
                         gini_simpson, top_value_schedule)
@@ -62,6 +71,13 @@ class RoundLog:
     values: np.ndarray
     reputations: np.ndarray
     source_acc: float = float("nan")   # accuracy on the attacked class
+    # attack success rate: fraction of watched source-class test samples
+    # the global model classifies as the attack's TARGET class (NaN when
+    # the scenario has no watched (source, target) pair)
+    attack_success: float = float("nan")
+    # honest-vs-malicious reputation separation after this round's Eq. 1
+    # update (NaN when the run has no malicious UEs)
+    rep_gap: float = float("nan")
     # True when the schedule was degenerate (no UE met the deadline) and the
     # server forced the highest-value UE. Problem (8) had no feasible point,
     # so ``objective`` is reported as 0.0 for forced rounds — the forced
@@ -134,6 +150,13 @@ class FeelServer:
     mirroring the engine='loop' pattern of the data plane.
     n_buckets: number of max_samples size buckets for the vectorized
     engine (1 = the old single global pad; 2-3 reclaim the padding waste).
+    scenario: an ``core.attacks.AttackScenario`` (or registry name) — the
+    threat model. Its data component must already be baked into
+    ``clients`` by the partition; the server applies the model/report
+    components on the scenario's activity schedule and tracks the
+    watched (source, target) metrics. Supersedes the legacy
+    ``model_poison``/``lie_boost`` knobs (kept for back-compat and
+    normalized into an equivalent scenario).
 
     The underscore round-phase methods (_schedule_round, _cohort_parts,
     _merge_cohort, _apply_attacks, _eval_masks, _aggregate_cohort,
@@ -154,7 +177,8 @@ class FeelServer:
                  engine: str = "vectorized", batch_size: int = 50,
                  pad_to: Optional[int] = None, n_buckets: int = 3,
                  cohort_data: Optional[CohortData] = None,
-                 control: str = "batched"):
+                 control: str = "batched",
+                 scenario: Optional[atk.AttackScenario] = None):
         assert engine in ("vectorized", "loop"), engine
         assert control in ("batched", "host"), control
         self.control = control
@@ -165,9 +189,28 @@ class FeelServer:
         self.policy = policy
         self.lr = lr
         self.adaptive_omega = adaptive_omega
-        self.lie_boost = lie_boost
-        self.watch_class = watch_class     # the attack's source class
-        self.model_poison = model_poison
+        # threat model: either an explicit AttackScenario (data attacks
+        # are already baked into ``clients`` by the partition; the server
+        # applies the model/report components on the schedule) or the
+        # legacy knobs, normalized into an equivalent scenario
+        if scenario is not None:
+            assert (model_poison is None and not lie_boost
+                    and watch_class is None), \
+                "scenario supersedes the legacy model_poison/lie_boost/" \
+                "watch_class knobs (set AttackScenario.watch instead)"
+            self.scenario = atk.as_scenario(scenario)
+        else:
+            self.scenario = atk.AttackScenario(
+                "legacy",
+                model=(atk.ModelAttack(scale=model_poison.scale)
+                       if model_poison is not None else None),
+                report=atk.ReportAttack(lie_boost) if lie_boost else None)
+        # metrics watch pair: explicit watch_class wins (legacy callers),
+        # else the scenario's (source, target)
+        watch = self.scenario.watch
+        self.watch_class = (watch_class if watch_class is not None
+                            else (watch[0] if watch else None))
+        self.watch_target = watch[1] if watch else None
         self.engine = engine
         self.batch_size = batch_size
         self.pad_to = pad_to        # stable cohort shape across seeds
@@ -179,6 +222,17 @@ class FeelServer:
         self.ages = np.ones(cfg.n_ues)          # rounds since last selected
         self.cpu_hz = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
         self.sizes = np.array([c.size for c in clients], float)
+        # malicious-set layout for the activity schedule: rank within the
+        # malicious set (by ue_id) drives the colluding round-robin
+        self._mal_mask = np.array([c.malicious for c in clients])
+        mal_ids = np.flatnonzero(self._mal_mask)
+        self._mal_rank = np.full(cfg.n_ues, -1)
+        self._mal_rank[mal_ids] = np.arange(mal_ids.size)
+        # stale free-riders replay the global model from ``staleness``
+        # rounds ago; keep exactly that much history (None otherwise)
+        st = self.scenario.model.staleness if self.scenario.model else 0
+        self._param_hist = (collections.deque(maxlen=st + 1) if st > 0
+                            else None)
         # UEs report label histograms once (metadata); poisoned labels are
         # what the UE *believes*, so the histogram reflects the flip.
         self.divs = np.array([gini_simpson(c.data.y, N_CLASSES)
@@ -238,26 +292,36 @@ class FeelServer:
     # Per-cohort execution engines: both return the stacked/list client
     # results as (acc_local, acc_test, aggregate-and-assign side effect).
     # ------------------------------------------------------------------ #
-    def _run_cohort_loop(self, sel: np.ndarray) -> Tuple[np.ndarray,
-                                                         np.ndarray]:
+    def _run_cohort_loop(self, sel: np.ndarray, t: int) -> Tuple[np.ndarray,
+                                                                 np.ndarray]:
         cfg = self.cfg
         reports = [local_train(self.clients[k], self.params,
                                cfg.local_epochs, self.lr,
-                               batch_size=self.batch_size,
-                               lie_boost=self.lie_boost,
-                               model_poison=self.model_poison) for k in sel]
+                               batch_size=self.batch_size) for k in sel]
+        acc_local = np.array([r.acc_local for r in reports])
+        params_list = [r.params for r in reports]
+
+        # attack application, per client — the loop engine IS the host
+        # oracle the masked batched path is pinned against
+        scn = self.scenario
+        ref = self._attack_ref_params()
+        mal = self._active_malicious(sel, t)
+        if scn.model is not None:
+            params_list = [scn.model.apply_host(self.params, p, ref)
+                           if m else p for p, m in zip(params_list, mal)]
+        if scn.report is not None:
+            acc_local = scn.report.apply(acc_local, mal)
 
         # server-side evaluation of every uploaded model (Alg. 1 line 14) on
         # the classes each UE claims to hold (see __init__ note)
         acc_test = np.empty(len(reports))
-        for i, (r, k) in enumerate(zip(reports, sel)):
+        for i, (p, k) in enumerate(zip(params_list, sel)):
             m = self._test_masks[k]
             acc_test[i] = float(mlp_accuracy(
-                r.params, jax.numpy.asarray(self.test.x[m]),
+                p, jax.numpy.asarray(self.test.x[m]),
                 jax.numpy.asarray(self.test.y[m]))) if m.any() else 0.0
-        acc_local = np.array([r.acc_local for r in reports])
 
-        self.params = fedavg([r.params for r in reports],
+        self.params = fedavg(params_list,
                              [r.n_samples for r in reports])
         return acc_local, acc_test
 
@@ -315,20 +379,55 @@ class FeelServer:
         acc_local = np.concatenate([p[2] for p in parts])[inv]
         return stacked, acc_local
 
-    def _apply_attacks(self, sel, stacked, acc_local):
-        """Model poisoning + dishonest reporting on the merged stack."""
-        mal = np.array([self.clients[k].malicious for k in sel])
-        if self.model_poison is not None and mal.any():
-            # same contract as the loop path: model_poison.apply() per
-            # malicious client (cold path — robustness studies only)
+    def _active_malicious(self, sel: np.ndarray, t: int) -> np.ndarray:
+        """(len(sel),) bool — scheduled UEs whose malicious behaviour is
+        ACTIVE in round t (the scenario's activity schedule gates the
+        model/report components; data attacks are baked into the data)."""
+        return self.scenario.schedule.active(
+            t, self._mal_mask, self._mal_rank)[sel]
+
+    def _attack_ref_params(self):
+        """Reference params for the model attack: the current global
+        model, or — for stale free-riders — the global model from
+        ``staleness`` rounds ago. Must be called exactly once per round
+        (it advances the history)."""
+        if self._param_hist is None:
+            return self.params
+        self._param_hist.append(self.params)     # start-of-round params
+        return self._param_hist[0]
+
+    def _apply_attacks(self, sel, stacked, acc_local, t):
+        """Model poisoning + dishonest reporting on the merged stack:
+        ONE masked ``tree_map`` over the malicious rows
+        (``ModelAttack.apply_stacked``) — no per-malicious-client
+        dispatch. ``_apply_attacks_oracle`` keeps the replaced per-client
+        ``.at[i].set`` loop as the parity oracle (tests/test_attacks.py
+        pins them bit-for-bit equal)."""
+        scn = self.scenario
+        ref = self._attack_ref_params()
+        mal = self._active_malicious(sel, t)
+        if scn.model is not None and mal.any():
+            stacked = scn.model.apply_stacked(stacked, self.params, mal,
+                                              ref)
+        if scn.report is not None:
+            acc_local = scn.report.apply(acc_local, mal)
+        return stacked, acc_local
+
+    def _apply_attacks_oracle(self, sel, stacked, acc_local, t):
+        """The pre-refactor O(n_malicious) dispatch loop — one
+        ``.at[i].set`` tree_map per malicious client. Kept ONLY as the
+        parity oracle for ``_apply_attacks``."""
+        scn = self.scenario
+        ref = self._attack_ref_params()
+        mal = self._active_malicious(sel, t)
+        if scn.model is not None and mal.any():
             for i in np.flatnonzero(mal):
-                poisoned = self.model_poison.apply(
-                    self.params, cohort.unstack(stacked, int(i)))
+                poisoned = scn.model.apply_host(
+                    self.params, cohort.unstack(stacked, int(i)), ref)
                 stacked = jax.tree.map(
                     lambda l, p, i=int(i): l.at[i].set(p), stacked, poisoned)
-        if self.lie_boost:
-            acc_local = np.where(
-                mal, np.minimum(acc_local + self.lie_boost, 1.0), acc_local)
+        if scn.report is not None:
+            acc_local = scn.report.apply(acc_local, mal)
         return stacked, acc_local
 
     def _eval_masks(self, sel: np.ndarray, n_pad: int) -> jax.Array:
@@ -345,8 +444,8 @@ class FeelServer:
         weights[:sel.size] = cd.sizes[sel]
         self.params = fedavg_stacked(stacked_p, weights)
 
-    def _run_cohort_vectorized(self, sel: np.ndarray) -> Tuple[np.ndarray,
-                                                               np.ndarray]:
+    def _run_cohort_vectorized(self, sel: np.ndarray,
+                               t: int) -> Tuple[np.ndarray, np.ndarray]:
         cfg = self.cfg
         cd = self._ensure_cohort_data()
         n = sel.size
@@ -365,7 +464,7 @@ class FeelServer:
         self.pad_waste.append(
             float(pad_slots) / max(float(cd.sizes[sel].sum()), 1.0))
 
-        stacked, acc_local = self._apply_attacks(sel, stacked, acc_local)
+        stacked, acc_local = self._apply_attacks(sel, stacked, acc_local, t)
 
         # evaluate + aggregate once on the merged stack, zero-padded to a
         # stable row count (null rows score 0 under an all-zero mask and
@@ -443,14 +542,15 @@ class FeelServer:
                          value=values[0])
         return values[0], sched, sched.selected, bool(forced[0])
 
-    def _train_cohort(self, sel: np.ndarray) -> Tuple[np.ndarray,
-                                                      np.ndarray]:
+    def _train_cohort(self, sel: np.ndarray, t: int) -> Tuple[np.ndarray,
+                                                              np.ndarray]:
         if self.engine == "vectorized":
-            return self._run_cohort_vectorized(sel)
-        return self._run_cohort_loop(sel)
+            return self._run_cohort_vectorized(sel, t)
+        return self._run_cohort_loop(sel, t)
 
     def _finalize_round(self, t: int, values, sched, sel, forced,
-                        acc_local, acc_test, g_acc, src_acc) -> RoundLog:
+                        acc_local, acc_test, g_acc, src_acc,
+                        atk_succ=float("nan")) -> RoundLog:
         """Alg. 1 lines 15-16 + logging: reputation, staleness, RoundLog."""
         if self.control == "batched":
             st = self._control_state()
@@ -463,10 +563,10 @@ class FeelServer:
             self.ages += 1.0
             self.ages[sel] = 1.0
         return self._log_round(t, values, sched, sel, forced, g_acc,
-                               src_acc)
+                               src_acc, atk_succ)
 
     def _log_round(self, t: int, values, sched, sel, forced, g_acc,
-                   src_acc) -> RoundLog:
+                   src_acc, atk_succ=float("nan")) -> RoundLog:
         """Append the RoundLog for a finalized round (reputation/ages
         already updated — the batched sweep runner updates ALL runs in one
         ``control.finalize_runs`` call and then logs per run)."""
@@ -476,28 +576,39 @@ class FeelServer:
             objective=0.0 if forced else sched.objective(),
             values=values.copy(),
             reputations=self.reputation.values.copy(), source_acc=src_acc,
+            attack_success=atk_succ,
+            rep_gap=atk.reputation_gap(self.reputation.values,
+                                       self._mal_mask),
             forced=forced)
         self.logs.append(log)
         return log
 
-    def _global_metrics(self) -> Tuple[float, float]:
-        """(global test accuracy, watch-class accuracy) of current params."""
+    def _global_metrics(self) -> Tuple[float, float, float]:
+        """(global test accuracy, watch-class accuracy, attack success
+        rate) of the current params. Attack success is the fraction of
+        watched source-class test samples classified as the scenario's
+        TARGET class (NaN without a watched pair)."""
         g_acc = float(mlp_accuracy(self.params, self._tx, self._ty))
-        src_acc = float("nan")
+        src_acc = atk_succ = float("nan")
         if self.watch_class is not None:
             m = self.test.y == self.watch_class
             if m.any():
+                xs = jax.numpy.asarray(self.test.x[m])
                 src_acc = float(mlp_accuracy(
-                    self.params, jax.numpy.asarray(self.test.x[m]),
-                    jax.numpy.asarray(self.test.y[m])))
-        return g_acc, src_acc
+                    self.params, xs, jax.numpy.asarray(self.test.y[m])))
+                if self.watch_target is not None:
+                    tgt = jnp.full(int(m.sum()), self.watch_target,
+                                   self._ty.dtype)
+                    atk_succ = float(mlp_accuracy(self.params, xs, tgt))
+        return g_acc, src_acc, atk_succ
 
     def run_round(self, t: int) -> RoundLog:
         values, sched, sel, forced = self._schedule_round(t)
-        acc_local, acc_test = self._train_cohort(sel)
-        g_acc, src_acc = self._global_metrics()
+        acc_local, acc_test = self._train_cohort(sel, t)
+        g_acc, src_acc, atk_succ = self._global_metrics()
         return self._finalize_round(t, values, sched, sel, forced,
-                                    acc_local, acc_test, g_acc, src_acc)
+                                    acc_local, acc_test, g_acc, src_acc,
+                                    atk_succ)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         for t in range(rounds or self.cfg.rounds):

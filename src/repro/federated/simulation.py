@@ -14,13 +14,19 @@ per-client oracle (see federated/server.py).
 
 ``run_sweep`` is the recommended entry point for multi-seed studies
 (§V averages, robustness sweeps): it generates each seed's dataset once,
-shares each (seed, attack-pair) partition and its device-resident padded
-layout across policies, and — where shapes allow (same cfg => same padded
-bucket levels) — stacks the per-round cohorts of ALL runs into one
-``cohort_train_multi``/``cohort_eval`` call per size bucket, so seeds and
-policies become one more slice of the vmapped client axis. Every run
-reproduces its sequential ``run_experiment`` twin exactly (same RNG
-streams; tests/test_sweep.py pins the parity).
+shares each (seed, data-attack) partition and its device-resident padded
+layout across policies (and across scenarios with identical poisoned
+data), and — where shapes allow (same cfg => same padded bucket levels) —
+stacks the per-round cohorts of ALL runs into one
+``cohort_train_multi``/``cohort_eval`` call per size bucket, so seeds,
+policies and threat scenarios become one more slice of the vmapped client
+axis. Every run reproduces its sequential ``run_experiment`` twin exactly
+(same RNG streams; tests/test_sweep.py pins the parity).
+
+The threat-model axis (``scenarios=[...]``) runs heterogeneous attack
+scenarios — label-flip variants, feature noise, free-riders, model
+poisoning, colluding schedules (core/attacks.py, DESIGN.md §8) — in the
+same stacked sweep; ``attack_pairs`` survives as a back-compat shim.
 """
 from __future__ import annotations
 
@@ -32,8 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FeelConfig
+from repro.core import attacks as atk
 from repro.core import control as ctl
-from repro.core.poisoning import LabelFlipAttack, pick_malicious
+from repro.core.poisoning import pick_malicious
 from repro.core.scheduler import Schedule
 from repro.data.partition import label_histogram, partition
 from repro.data.synthetic_mnist import N_CLASSES, generate
@@ -53,32 +60,58 @@ def run_experiment(policy: str = "dqs",
                    model_poison_scale: Optional[float] = None,
                    lie_boost: float = 0.0,
                    engine: str = "vectorized",
-                   control: str = "batched") -> Dict:
+                   control: str = "batched",
+                   scenario=None) -> Dict:
+    """One FEEL experiment; returns the per-round curves + run summary.
+
+    Threat model — either an explicit ``scenario`` (an
+    ``core.attacks.AttackScenario``, a registry name, or a legacy
+    ``(source, target)`` pair) or the legacy knobs. The legacy-knob
+    contract is regression-tested (tests/test_attacks.py):
+
+    - ``model_poison_scale`` REPLACES the label-flip data attack —
+      malicious UEs keep clean data and poison their *updates* instead
+      (the two never compose through these knobs; compose explicitly via
+      an ``AttackScenario`` if both are wanted);
+    - ``no_attack=True`` wins over everything: no data attack, no model
+      poisoning, no lie_boost, and malicious flags are not set;
+    - ``lie_boost`` composes with whichever attack is active;
+    - metrics always watch ``attack_pair``.
+
+    ``scenario`` supersedes the legacy knobs (they must stay at their
+    defaults when it is given).
+    """
     cfg = cfg or FeelConfig()
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0], omega_div=omega[1])
+    if scenario is not None:
+        assert (not no_attack and model_poison_scale is None
+                and not lie_boost and tuple(attack_pair) == (6, 2)), \
+            "scenario supersedes the legacy attack knobs (incl. " \
+            "attack_pair — set AttackScenario.watch instead)"
+        scn = atk.as_scenario(scenario)
+    else:
+        scn = atk.legacy_scenario(attack_pair, no_attack,
+                                  model_poison_scale, lie_boost)
     rng = np.random.default_rng(seed)
     train, test = generate(n_train, n_test, seed=seed)
     malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
-    attack = None if no_attack else LabelFlipAttack(*attack_pair)
-    if model_poison_scale is not None:
-        attack = None        # model poisoning replaces the data attack
     clients = partition(train, cfg.n_ues, rng,
-                        None if no_attack else malicious, attack)
-    mp = None
-    if model_poison_scale is not None and not no_attack:
-        from repro.core.poisoning import ModelPoisonAttack
-        mp = ModelPoisonAttack(scale=model_poison_scale)
+                        None if scn.benign else malicious, scn.data)
     server = FeelServer(cfg, clients, test, rng, policy=policy,
-                        adaptive_omega=adaptive_omega,
-                        watch_class=attack_pair[0], model_poison=mp,
-                        lie_boost=lie_boost, engine=engine, control=control)
+                        adaptive_omega=adaptive_omega, scenario=scn,
+                        engine=engine, control=control)
     logs = server.run(rounds)
     return {
+        "scenario": scn.name,
         "acc": [l.global_acc for l in logs],
         "source_acc": [l.source_acc for l in logs],
+        "attack_success": [l.attack_success for l in logs],
         "malicious_selected": [l.n_malicious_selected for l in logs],
         "objective": [l.objective for l in logs],
+        "rep_gap": [l.rep_gap for l in logs],
+        "recovery_rounds": atk.recovery_rounds(
+            [l.attack_success for l in logs], cfg.recovery_threshold),
         "final_reputation_malicious": float(
             np.mean(server.reputation.values[malicious])),
         "final_reputation_honest": float(np.mean(np.delete(
@@ -92,19 +125,21 @@ def run_experiment(policy: str = "dqs",
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass
 class SweepResult:
-    """Tidy results of a (policies x seeds x attack_pairs) sweep.
+    """Tidy results of a (policies x seeds x scenarios) sweep.
 
-    rows — one record per (policy, seed, attack_pair, round) with the
-        per-round metrics (acc, source_acc, malicious_selected, objective,
-        forced).
+    rows — one record per (policy, seed, scenario, round) with the
+        per-round metrics (acc, source_acc, attack_success,
+        malicious_selected, objective, rep_gap, forced).
     runs — one record per run, shaped exactly like ``run_experiment``'s
-        return value plus the (policy, seed, attack_pair) key.
+        return value plus the (policy, seed, scenario, attack_pair) key
+        (``attack_pair`` is the scenario's watched pair, None if it has
+        none — kept for back-compat with pair-keyed callers).
     """
     rows: List[Dict]
     runs: List[Dict]
 
     def select(self, **key) -> List[Dict]:
-        """Run summaries matching e.g. policy=..., seed=..., attack_pair=..."""
+        """Run summaries matching e.g. policy=..., seed=..., scenario=..."""
         return [r for r in self.runs
                 if all(r[k] == v for k, v in key.items())]
 
@@ -117,32 +152,43 @@ class SweepResult:
 
 
 class _SweepRun:
-    """One (policy, seed, attack_pair) run's server + in-flight round state."""
+    """One (policy, seed, scenario) run's server + in-flight round state."""
 
-    def __init__(self, policy, seed, pair, server, malicious, watch_mask):
+    def __init__(self, policy, seed, scenario, server, malicious,
+                 watch_mask, ty_target):
         self.policy = policy
         self.seed = seed
-        self.pair = pair
+        self.scenario = scenario
+        self.pair = scenario.watch         # back-compat attack_pair key
         self.server = server
         self.malicious = malicious
         self.watch_mask = watch_mask       # (T,) float32, source-class rows
+        self.ty_target = ty_target         # (T,) labels relabelled to the
+        #                                    attack target (== ty if none)
         self.plan = None                   # (values, sched, sel, forced)
         self.stacked = None                # merged cohort params (sel order)
         self.acc_local = None
         self.acc_test = None
         self.g_acc = float("nan")
         self.src_acc = float("nan")
+        self.atk_succ = float("nan")
 
     def summary(self) -> Dict:
         s = self.server
         return {
             "policy": self.policy, "seed": self.seed,
+            "scenario": self.scenario.name,
             "attack_pair": self.pair,
             "acc": [l.global_acc for l in s.logs],
             "source_acc": [l.source_acc for l in s.logs],
+            "attack_success": [l.attack_success for l in s.logs],
             "malicious_selected": [l.n_malicious_selected for l in s.logs],
             "objective": [l.objective for l in s.logs],
+            "rep_gap": [l.rep_gap for l in s.logs],
             "forced": [l.forced for l in s.logs],
+            "recovery_rounds": atk.recovery_rounds(
+                [l.attack_success for l in s.logs],
+                s.cfg.recovery_threshold),
             "final_reputation_malicious": float(
                 np.mean(s.reputation.values[self.malicious])),
             "final_reputation_honest": float(np.mean(np.delete(
@@ -154,6 +200,7 @@ class _SweepRun:
 def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               attack_pairs: Sequence[Tuple[int, int]] = ((6, 2),),
               cfg: Optional[FeelConfig] = None, *,
+              scenarios: Optional[Sequence] = None,
               n_train: int = 50_000, n_test: int = 10_000,
               omega: Optional[Tuple[float, float]] = None,
               adaptive_omega: bool = False,
@@ -165,17 +212,32 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               control: str = "batched",
               n_buckets: int = 3,
               stack_runs: bool = True) -> SweepResult:
-    """Run the full (policies x seeds x attack_pairs) grid batched.
+    """Run the full (policies x seeds x scenarios) grid batched.
 
-    Semantics: every run is exactly ``run_experiment(policy, pair,
-    seed=seed, ...)`` — same datasets, partitions and RNG streams — but the
-    sweep (1) generates each seed's dataset once, (2) builds each
-    (seed, attack-pair) partition and its device-resident padded bucket
-    layout once, shared across policies, and (3) with ``stack_runs`` and
-    the vectorized engine, trains/evaluates the per-round cohorts of ALL
-    runs in one vmapped call per size bucket: a shared ``pad_to`` makes the
-    bucket levels identical across runs, so runs become one more slice of
-    the stacked client axis (``cohort.cohort_train_multi``).
+    The threat-model axis: ``scenarios`` is a sequence of
+    ``core.attacks.AttackScenario`` specs (scenario objects, registry
+    names, or legacy ``(source, target)`` pairs) — HETEROGENEOUS threat
+    models (label-flip variants, feature noise, free-riders, model
+    poisoning, colluding schedules, ...) run as one stacked sweep through
+    the bucketed engine and batched control plane. When ``scenarios`` is
+    None the legacy ``attack_pairs`` + ``no_attack`` /
+    ``model_poison_scale`` / ``lie_boost`` knobs are shimmed into one
+    scenario per pair (``attacks.legacy_scenario`` — same contract as
+    ``run_experiment``); the legacy knobs must stay at their defaults
+    when ``scenarios`` is given.
+
+    Semantics: every run is exactly ``run_experiment(policy,
+    scenario=scn, seed=seed, ...)`` — same datasets, partitions and RNG
+    streams — but the sweep (1) generates each seed's dataset once,
+    (2) builds each (seed, data-attack) partition and its device-resident
+    padded bucket layout once, shared across policies AND across
+    scenarios whose poisoned data is identical (e.g. every pure
+    model-poisoning scenario shares the clean ``mal_only`` partition),
+    and (3) with ``stack_runs`` and the vectorized engine,
+    trains/evaluates the per-round cohorts of ALL runs in one vmapped
+    call per size bucket: a shared ``pad_to`` makes the bucket levels
+    identical across runs, so runs become one more slice of the stacked
+    client axis (``cohort.cohort_train_multi``).
 
     ``control="batched"`` (default) also stacks the *control plane*: with
     ``stack_runs``, round t of every run is scheduled by ONE vmapped
@@ -195,34 +257,33 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                                   omega_div=omega[1])
     policies = list(policies)
     seeds = [int(s) for s in seeds]
-    attack_pairs = [tuple(p) for p in attack_pairs]
+    if scenarios is None:
+        scns = [atk.legacy_scenario(tuple(p), no_attack,
+                                    model_poison_scale, lie_boost)
+                for p in attack_pairs]
+    else:
+        assert (not no_attack and model_poison_scale is None
+                and not lie_boost
+                and tuple(map(tuple, attack_pairs)) == ((6, 2),)), \
+            "the scenarios axis supersedes the legacy attack knobs " \
+            "(incl. attack_pairs — set AttackScenario.watch instead)"
+        scns = [atk.as_scenario(s) for s in scenarios]
 
     # -- shared caches ------------------------------------------------- #
     data_cache = {s: generate(n_train, n_test, seed=s) for s in set(seeds)}
 
-    def _attack_key(pair):
-        # partitions are identical across attack pairs when labels are not
-        # flipped (no_attack / model-poison runs)
-        if no_attack:
-            return "none"
-        if model_poison_scale is not None:
-            return "mal_only"
-        return pair
-
     part_cache: Dict = {}
     for seed in set(seeds):
-        for pair in attack_pairs:
-            key = (seed, _attack_key(pair))
+        for scn in scns:
+            key = (seed, scn.data_key())
             if key in part_cache:
                 continue
             train, test = data_cache[seed]
             rng = np.random.default_rng(seed)
             malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
-            attack = None
-            if not no_attack and model_poison_scale is None:
-                attack = LabelFlipAttack(*pair)
             clients = partition(train, cfg.n_ues, rng,
-                                None if no_attack else malicious, attack)
+                                None if scn.benign else malicious,
+                                scn.data)
             # freeze the post-partition RNG state: each run restores it so
             # its downstream stream (wireless placement, channel draws)
             # matches its sequential run_experiment twin exactly
@@ -244,29 +305,29 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
             cohort_cache[(seed, akey)] = build_cohort_data(
                 clients, mask_arr, pad_to=pad_to, n_buckets=n_buckets)
 
-    mp = None
-    if model_poison_scale is not None and not no_attack:
-        from repro.core.poisoning import ModelPoisonAttack
-        mp = ModelPoisonAttack(scale=model_poison_scale)
-
     runs: List[_SweepRun] = []
-    for pair in attack_pairs:
+    for scn in scns:
         for seed in seeds:
             for policy in policies:
                 clients, malicious, rng_state = \
-                    part_cache[(seed, _attack_key(pair))]
+                    part_cache[(seed, scn.data_key())]
                 _, test = data_cache[seed]
                 rng = np.random.default_rng(seed)
                 rng.bit_generator.state = rng_state
                 server = FeelServer(
                     cfg, clients, test, rng, policy=policy,
-                    adaptive_omega=adaptive_omega, watch_class=pair[0],
-                    model_poison=mp, lie_boost=lie_boost, engine=engine,
+                    adaptive_omega=adaptive_omega, scenario=scn,
+                    engine=engine,
                     control=control, pad_to=pad_to, n_buckets=n_buckets,
-                    cohort_data=cohort_cache.get((seed, _attack_key(pair))))
-                watch = (test.y == pair[0]).astype(np.float32)
-                runs.append(_SweepRun(policy, seed, pair, server,
-                                      malicious, watch))
+                    cohort_data=cohort_cache.get((seed, scn.data_key())))
+                watch = ((test.y == scn.watch[0]).astype(np.float32)
+                         if scn.watch else
+                         np.zeros_like(test.y, np.float32))
+                ty_target = (np.full_like(test.y, scn.watch[1])
+                             if scn.watch else test.y)
+                runs.append(_SweepRun(policy, seed, scn, server,
+                                      malicious, watch,
+                                      jnp.asarray(ty_target)))
 
     n_rounds = rounds or cfg.rounds
     if stack_runs and engine == "vectorized":
@@ -282,10 +343,13 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                 run.server.run_round(t)
 
     rows = [
-        {"policy": run.policy, "seed": run.seed, "attack_pair": run.pair,
+        {"policy": run.policy, "seed": run.seed,
+         "scenario": run.scenario.name, "attack_pair": run.pair,
          "round": l.round, "acc": l.global_acc, "source_acc": l.source_acc,
+         "attack_success": l.attack_success,
          "malicious_selected": l.n_malicious_selected,
-         "objective": l.objective, "forced": l.forced}
+         "objective": l.objective, "rep_gap": l.rep_gap,
+         "forced": l.forced}
         for run in runs for l in run.server.logs]
     return SweepResult(rows=rows, runs=[r.summary() for r in runs])
 
@@ -399,7 +463,7 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
             lambda l, r=jnp.asarray(gidx[inv]): jnp.take(l, r, axis=0),
             big)
         run.stacked, run.acc_local = run.server._apply_attacks(
-            run.plan[2], stacked, acc_all[gidx][inv])
+            run.plan[2], stacked, acc_all[gidx][inv], t)
 
     # -- phase C: evaluate uploads — one call per seed ------------------ #
     for group in _by_seed(runs):
@@ -418,20 +482,34 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
                                        cohort.pad_count(sel.size, _PAD))
         run.server._aggregate_cohort(sel, stacked_p)
 
-    # -- phase E: global + source-class accuracy — one call per seed ---- #
+    # -- phase E: global / source-class / attack-success — one call per
+    # seed. A watched run contributes three rows to the vmapped eval:
+    # full-test accuracy, watched-class accuracy, and the attack success
+    # rate (labels relabelled to the attack's target class over the same
+    # watch mask); a watch-less run contributes only the accuracy row —
+    # no wasted forward passes on rows whose result would be NaN anyway.
     for group in _by_seed(runs):
         ty = group[0].server._ty
         ones = jnp.ones_like(ty, jnp.float32)
-        stacks = [cohort.broadcast_params(run.server.params, 2)
-                  for run in group]
-        masks = [jnp.stack([ones, jnp.asarray(run.watch_mask)])
-                 for run in group]
-        accs = _eval_stacked(group[0].server, stacks, masks,
-                             [2] * len(group))
-        for run, a in zip(group, accs):
+        counts = [3 if run.scenario.watch else 1 for run in group]
+        stacks = [cohort.broadcast_params(run.server.params, c)
+                  for run, c in zip(group, counts)]
+        masks, ys = [], []
+        for run, c in zip(group, counts):
+            if c == 3:
+                wm = jnp.asarray(run.watch_mask)
+                masks.append(jnp.stack([ones, wm, wm]))
+                ys.append(jnp.stack([ty, ty, run.ty_target]))
+            else:
+                masks.append(ones[None])
+                ys.append(ty[None])
+        accs = _eval_stacked(group[0].server, stacks, masks, counts,
+                             ys=ys)
+        for run, c, a in zip(group, counts, accs):
             run.g_acc = float(a[0])
-            run.src_acc = float(a[1]) if run.watch_mask.any() else \
-                float("nan")
+            watched = c == 3 and bool(run.watch_mask.any())
+            run.src_acc = float(a[1]) if watched else float("nan")
+            run.atk_succ = float(a[2]) if watched else float("nan")
 
     # -- phase F: reputation / staleness (one batched Eq. 1 call) + logs  #
     if sweep_ctrl is not None:
@@ -445,14 +523,15 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         for run in runs:
             values, sched, sel, forced = run.plan
             run.server._log_round(t, values, sched, sel, forced,
-                                  run.g_acc, run.src_acc)
+                                  run.g_acc, run.src_acc, run.atk_succ)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
     else:
         for run in runs:
             values, sched, sel, forced = run.plan
             run.server._finalize_round(t, values, sched, sel, forced,
                                        run.acc_local, run.acc_test,
-                                       run.g_acc, run.src_acc)
+                                       run.g_acc, run.src_acc,
+                                       run.atk_succ)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
 
 
@@ -463,14 +542,25 @@ def _by_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:
     return list(groups.values())
 
 
-def _eval_stacked(server, stacks, masks, counts) -> List[np.ndarray]:
-    """One cohort_eval over the concatenated per-run stacks; split back."""
+def _eval_stacked(server, stacks, masks, counts, ys=None) -> List[np.ndarray]:
+    """One cohort_eval over the concatenated per-run stacks; split back.
+
+    ``ys`` (optional) — per-run (rows, T) label arrays for metrics that
+    score against relabelled targets (attack success); None keeps the
+    shared test labels for every row."""
     n_tot = sum(counts)
     n_pad = cohort.pad_count(n_tot, _PAD)
     stacked = cohort.pad_stacked(cohort.merge_stacks(stacks), n_pad)
     mask = cohort.pad_stacked(cohort.merge_stacks(masks), n_pad)
-    acc = np.asarray(
-        cohort.cohort_eval(stacked, server._tx, server._ty, mask), float)
+    if ys is None:
+        acc = np.asarray(
+            cohort.cohort_eval(stacked, server._tx, server._ty, mask),
+            float)
+    else:
+        y_rows = cohort.pad_stacked(cohort.merge_stacks(ys), n_pad)
+        acc = np.asarray(
+            cohort.cohort_eval_rows(stacked, server._tx, y_rows, mask),
+            float)
     out, off = [], 0
     for c in counts:
         out.append(acc[off:off + c])

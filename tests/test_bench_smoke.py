@@ -1,9 +1,10 @@
 """Tier-1 gate for benchmarks/bench_round.py: the smoke mode runs a tiny
-instance of the engine, sweep and control-plane benchmarks with loud
-internal assertions — a bench regression (engine crash, padding-waste
-regression, sweep/sequential divergence, host/batched control-plane
-selection mismatch) fails here instead of rotting silently until the
-next manual bench run."""
+instance of the engine, sweep, control-plane and threat-model benchmarks
+with loud internal assertions — a bench regression (engine crash,
+padding-waste regression, sweep/sequential divergence, host/batched
+control-plane selection mismatch, masked/per-client attack-application
+mismatch) fails here instead of rotting silently until the next manual
+bench run."""
 import os
 import subprocess
 import sys
@@ -30,4 +31,9 @@ def test_bench_round_smoke():
     assert any(line.startswith("vectorized,") for line in
                r.stdout.splitlines())
     assert any(line.startswith("control,") for line in
+               r.stdout.splitlines())
+    # threat-model plane: masked-vs-loop apply rows + the scenario sweep
+    assert any(line.startswith("attacks,") and not line.endswith("speedup")
+               for line in r.stdout.splitlines())
+    assert any(line.startswith("attacks_sweep,") for line in
                r.stdout.splitlines())

@@ -28,6 +28,11 @@ def test_sweep_matches_sequential_run_experiment(sweep):
         np.testing.assert_allclose(run["acc"], ref["acc"], atol=1e-7)
         np.testing.assert_allclose(run["source_acc"], ref["source_acc"],
                                    atol=1e-6)
+        np.testing.assert_allclose(run["attack_success"],
+                                   ref["attack_success"], atol=1e-6)
+        np.testing.assert_allclose(run["rep_gap"], ref["rep_gap"],
+                                   atol=1e-7)
+        assert run["recovery_rounds"] == ref["recovery_rounds"]
         assert run["malicious_selected"] == ref["malicious_selected"]
         np.testing.assert_allclose(run["objective"], ref["objective"],
                                    atol=1e-9)
@@ -57,9 +62,9 @@ def test_sweep_tidy_table(sweep):
     metrics; mean_curve reduces over seeds."""
     assert len(sweep.rows) == 2 * 2 * KW["rounds"]
     r0 = sweep.rows[0]
-    for field in ("policy", "seed", "attack_pair", "round", "acc",
-                  "source_acc", "malicious_selected", "objective",
-                  "forced"):
+    for field in ("policy", "seed", "scenario", "attack_pair", "round",
+                  "acc", "source_acc", "attack_success",
+                  "malicious_selected", "objective", "rep_gap", "forced"):
         assert field in r0, field
     curve = sweep.mean_curve("acc", policy="dqs")
     assert curve.shape == (KW["rounds"],)
