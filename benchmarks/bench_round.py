@@ -44,18 +44,32 @@ plus a 4-scenario heterogeneous ``run_sweep`` (label flip, feature noise,
 free-rider, sign-flip) stacked vs sequential — written to
 ``results/BENCH_attacks.json``.
 
-``--smoke`` runs a tiny instance of both benchmarks with loud assertions
+``--defenses`` measures the defense plane: every robust aggregator
+(trimmed mean, median, norm clip, Krum) applied to a K-row stacked update
+matrix, host compressed-numpy oracle vs the batched jnp twin, swept over
+K and over n_malicious at K=64 (host/batched parity asserted per cell;
+the batched path must be flat in n_malicious) — written to
+``results/BENCH_defenses.json``.
+
+``--smoke`` runs a tiny instance of every benchmark with loud assertions
 (bucketed padding waste must not exceed the single-pad waste; curves must
 be finite) — wired into tier-1 via tests/test_bench_smoke.py so bench
 regressions fail loudly.
+
+Every ``results/BENCH_*.json`` artifact goes through ONE writer
+(``write_bench_json``) with a shared schema: ``{"bench": <name>, "meta":
+{commit, python, jax, numpy, timestamp}, ...payload}``. Only canonical
+grids overwrite the tracked artifacts — ad-hoc sizes print and skip.
 
 CSV rows:
 
     engine,K,n_train,s_per_round,median_round_s,speedup,median_speedup,pad_waste
 """
 import argparse
+import datetime
 import json
 import os
+import platform
 import subprocess
 import sys
 import time
@@ -63,6 +77,48 @@ import time
 import numpy as np
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _bench_meta():
+    """Environment/commit metadata stamped into every BENCH_* artifact."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(os.path.abspath(__file__))
+        ).stdout.strip() or "unknown"
+    except OSError:
+        commit = "unknown"
+
+    def ver(pkg):
+        try:
+            import importlib.metadata
+            return importlib.metadata.version(pkg)
+        except Exception:
+            return "unknown"
+
+    return {"commit": commit, "python": platform.python_version(),
+            "jax": ver("jax"), "numpy": ver("numpy"),
+            "timestamp": datetime.datetime.now(datetime.timezone.utc)
+            .isoformat(timespec="seconds")}
+
+
+def write_bench_json(name, payload, canonical=True):
+    """The ONE writer for results/BENCH_<name>.json.
+
+    Shared schema: {"bench": ..., "meta": _bench_meta(), **payload}. A
+    non-canonical run (ad-hoc --ks / sizes) must not clobber the tracked
+    measurement, so it prints and skips instead.
+    """
+    if not canonical:
+        print(f"# non-canonical sizes; results/BENCH_{name}.json left "
+              "untouched", file=sys.stderr)
+        return
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": payload.pop("bench", name),
+                   "meta": _bench_meta(), **payload}, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
 
 _WORKER = r"""
 import json, sys, time
@@ -285,10 +341,83 @@ else:
                       "accs": accs}))
 """
 
+_DEFENSES_WORKER = r"""
+import json, sys, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import defenses as dfs
+from repro.models.mlp import mlp_init
+
+k, reps = int(sys.argv[1]), int(sys.argv[2])
+n_mals = [int(x) for x in sys.argv[3].split(",")]
+rng = np.random.default_rng(0)
+template = mlp_init(jax.random.PRNGKey(0))
+leaves, treedef = jax.tree.flatten(template)
+weights = (rng.integers(1, 31, k) * 50).astype(float)
+
+def mk_updates(n_mal):
+    # honest uploads cluster near the global model, malicious sit far out
+    # (so Krum/clip actually have something to reject/clip)
+    rows = []
+    for i in range(k):
+        s = 5.0 if i < n_mal else 0.1
+        rows.append(jax.tree.unflatten(treedef, [
+            (np.asarray(l) + s * rng.normal(size=l.shape))
+            .astype(np.float32) for l in leaves]))
+    return rows
+
+AGGS = {"trimmed_mean": dfs.TrimmedMean(0.2), "median": dfs.Median(),
+        "norm_clip": dfs.NormClip(1.0), "krum": dfs.Krum()}
+
+def sync(t):
+    jax.block_until_ready(jax.tree.leaves(t))
+    return t
+
+rows_out = []
+for n_mal in n_mals:
+    params_list = mk_updates(n_mal)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *params_list)
+    sync(stacked)
+    for name, agg in AGGS.items():
+        # parity gate before timing: decisions exact, payload to 2e-6
+        h, hs = dfs.aggregate_host(agg, params_list, weights, template,
+                                   n_mal)
+        b, bs = dfs.aggregate_stacked(agg, stacked, weights, template, k,
+                                      n_mal)
+        for x, y in zip(jax.tree.leaves(sync(h)), jax.tree.leaves(sync(b))):
+            assert np.allclose(np.asarray(x), np.asarray(y), atol=2e-6), \
+                f"host/batched {name} aggregate mismatch"
+        assert (hs.n_clipped, hs.n_rejected) == (bs.n_clipped,
+                                                 bs.n_rejected), name
+        for _ in range(2):            # dispatch-cache warmup
+            sync(dfs.aggregate_stacked(agg, stacked, weights, template,
+                                       k, n_mal)[0])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sync(dfs.aggregate_stacked(agg, stacked, weights, template,
+                                       k, n_mal)[0])
+        t_b = (time.perf_counter() - t0) / reps * 1e3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sync(dfs.aggregate_host(agg, params_list, weights, template,
+                                    n_mal)[0])
+        t_h = (time.perf_counter() - t0) / reps * 1e3
+        rows_out.append({"aggregator": name, "K": k, "n_malicious": n_mal,
+                         "host_ms": round(t_h, 3),
+                         "batched_ms": round(t_b, 3)})
+print(json.dumps({"rows": rows_out}))
+"""
+
 # engine CLI name -> (FeelServer engine, n_buckets override or None)
 ENGINES = {"loop": ("loop", None),
            "vectorized": ("vectorized", None),
            "unbucketed": ("vectorized", 1)}
+
+# argparse defaults of the default (engines) mode — ALSO the canonical
+# grid that overwrites results/BENCH_engines.json, so the two can never
+# drift apart (cf. CONTROL_KS / ATTACK_DEFAULTS / DEFENSE_KS)
+ENGINE_DEFAULTS = {"ks": [50, 200, 500], "rounds": 3, "seeds": 3,
+                   "engines": ["loop", "vectorized"], "buckets": 3}
 
 
 def _run_worker(code, argv, timeout=3600):
@@ -338,7 +467,10 @@ def bench_k(k, n_train, n_test, rounds, seeds, engines, buckets):
     return out
 
 
-def bench_sweep(n_seeds, n_train, n_test, rounds):
+SWEEP_DEFAULTS = (3, 10_000, 1_000, 3)    # n_seeds, n_train, n_test, rounds
+
+
+def bench_sweep(n_seeds, n_train, n_test, rounds, write_json=True):
     """Batched run_sweep vs the same grid of sequential run_experiment
     calls — each mode cold, in a fresh subprocess."""
     print("mode,n_runs,s_total,speedup")
@@ -351,6 +483,15 @@ def bench_sweep(n_seeds, n_train, n_test, rounds):
         r = res[mode]
         print(f"{mode},{r['n_runs']},{r['s_total']:.1f},"
               f"{base / r['s_total']:.2f}", flush=True)
+    if write_json:
+        write_bench_json(
+            "sweep",
+            {"bench": "batched_sweep_vs_sequential",
+             "rows": [{"mode": m, "n_runs": res[m]["n_runs"],
+                       "s_total": res[m]["s_total"]}
+                      for m in ("sequential", "sweep")]},
+            canonical=(n_seeds, n_train, n_test,
+                       rounds) == SWEEP_DEFAULTS)
     return base / res["sweep"]["s_total"]
 
 
@@ -381,17 +522,11 @@ def bench_control(ks, n_runs, rounds, write_json=True):
         print(f"control,{k},{n_runs},{out['host_scan_ms']:.2f},"
               f"{out['host_ms']:.2f},{out['batched_ms']:.2f},"
               f"{vs_scan:.2f},{speedup:.2f}", flush=True)
-    if write_json and tuple(ks) == CONTROL_KS:
-        path = os.path.join(os.path.dirname(__file__), "..", "results",
-                            "BENCH_control.json")
-        with open(path, "w") as f:
-            json.dump({"bench": "control_plane_schedule_phase",
-                       "unit": "ms_per_round_all_runs", "rows": rows}, f,
-                      indent=2)
-        print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
-    elif write_json:
-        print(f"# not the canonical --ks {' '.join(map(str, CONTROL_KS))}"
-              " grid; BENCH_control.json left untouched", file=sys.stderr)
+    if write_json:
+        write_bench_json("control",
+                         {"bench": "control_plane_schedule_phase",
+                          "unit": "ms_per_round_all_runs", "rows": rows},
+                         canonical=tuple(ks) == CONTROL_KS)
     return rows
 
 
@@ -428,15 +563,57 @@ def bench_attacks(n_rows=64, reps=50, n_train=4000, rounds=3,
           f"{sw['sequential_s']:.2f},"
           f"{sw['sequential_s'] / sw['stacked_s']:.2f}", flush=True)
     out["sweep"] = sw
-    if write_json and (n_rows, reps, n_train, rounds) == ATTACK_DEFAULTS:
-        path = os.path.join(os.path.dirname(__file__), "..", "results",
-                            "BENCH_attacks.json")
-        with open(path, "w") as f:
-            json.dump({"bench": "threat_model_plane",
-                       "apply_unit": "ms_per_application",
-                       "apply": out["apply"], "sweep": sw}, f, indent=2)
-        print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+    if write_json:
+        write_bench_json("attacks",
+                         {"bench": "threat_model_plane",
+                          "apply_unit": "ms_per_application",
+                          "apply": out["apply"], "sweep": sw},
+                         canonical=(n_rows, reps, n_train,
+                                    rounds) == ATTACK_DEFAULTS)
     return out
+
+
+DEFENSE_KS = (16, 64, 128)        # the tracked BENCH_defenses.json K grid
+DEFENSE_NMALS = (1, 4, 16, 32)    # n_malicious sweep at K=64
+
+
+def bench_defenses(ks=DEFENSE_KS, n_mals=DEFENSE_NMALS, reps=10,
+                   write_json=True):
+    """Defense plane: every robust aggregator applied to a K-row stacked
+    update matrix — host compressed oracle vs the batched jnp twin
+    (parity asserted in the worker before timing). Two sweeps: cost vs K
+    (n_malicious = K/8) and cost vs n_malicious at K=64, where the
+    batched path must stay flat (the acceptance claim of
+    results/BENCH_defenses.json)."""
+    print("defense,aggregator,K,n_malicious,host_ms,batched_ms,speedup")
+    rows = []
+
+    def run(k, mals):
+        out = _run_worker(_DEFENSES_WORKER,
+                          [k, reps, ",".join(map(str, mals))])
+        for r in out["rows"]:
+            rows.append(r)
+            print(f"defense,{r['aggregator']},{r['K']},{r['n_malicious']},"
+                  f"{r['host_ms']:.2f},{r['batched_ms']:.2f},"
+                  f"{r['host_ms'] / r['batched_ms']:.2f}", flush=True)
+
+    # the n_malicious sweep runs at K=64 when the grid has it (the
+    # tracked flatness claim), else at the grid's largest K
+    nmal_k = 64 if 64 in ks else max(ks)
+    for k in ks:
+        if k == nmal_k:
+            run(k, sorted(set(int(m) for m in n_mals if m < k)
+                          | {max(k // 8, 1)}))
+        else:
+            run(k, [max(k // 8, 1)])
+    if write_json:
+        write_bench_json(
+            "defenses",
+            {"bench": "defense_plane_robust_aggregation",
+             "unit": "ms_per_aggregation", "rows": rows},
+            canonical=(tuple(ks) == DEFENSE_KS
+                       and tuple(n_mals) == DEFENSE_NMALS))
+    return rows
 
 
 def smoke():
@@ -451,7 +628,7 @@ def smoke():
     assert w_b <= w_un + 1e-9, (
         f"bucketed padding waste {w_b:.2f}x exceeds single-pad {w_un:.2f}x")
     assert all(t > 0 for name in out for t in out[name][2])
-    speedup = bench_sweep(2, 3000, 300, 2)
+    speedup = bench_sweep(2, 3000, 300, 2, write_json=False)
     assert speedup > 0, speedup
     # control plane: the worker's internal parity assertion (host ==
     # batched selections for all five policies) is the actual gate
@@ -462,27 +639,40 @@ def smoke():
     atk_out = bench_attacks(n_rows=16, reps=3, n_train=2500, rounds=2,
                             write_json=False)
     assert all(r["masked_ms"] > 0 for r in atk_out["apply"])
+    # defense plane: the worker asserts host == batched robust
+    # aggregation (decisions exact, payload 2e-6) for every aggregator
+    def_rows = bench_defenses(ks=[8], n_mals=[2], reps=2,
+                              write_json=False)
+    # 4 aggregators x the {requested 2, default k//8=1} n_malicious grid
+    assert len(def_rows) == 8 and all(r["batched_ms"] > 0
+                                      for r in def_rows)
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
           f"control speedup {ctl_rows[0]['speedup']:.2f}x, "
           f"attack apply masked {atk_out['apply'][-1]['masked_ms']:.2f}ms "
-          f"vs loop {atk_out['apply'][-1]['loop_ms']:.2f}ms",
+          f"vs loop {atk_out['apply'][-1]['loop_ms']:.2f}ms, "
+          f"defense agg host {def_rows[0]['host_ms']:.2f}ms "
+          f"vs batched {def_rows[0]['batched_ms']:.2f}ms",
           file=sys.stderr)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--ks", type=int, nargs="+", default=[50, 200, 500])
-    ap.add_argument("--rounds", type=int, default=3)
-    ap.add_argument("--seeds", type=int, default=3,
+    ap.add_argument("--ks", type=int, nargs="+",
+                    default=ENGINE_DEFAULTS["ks"])
+    ap.add_argument("--rounds", type=int,
+                    default=ENGINE_DEFAULTS["rounds"])
+    ap.add_argument("--seeds", type=int, default=ENGINE_DEFAULTS["seeds"],
                     help="independent fresh-partition runs per measurement")
     ap.add_argument("--n-train", type=int, default=None,
                     help="override the per-K automatic corpus size")
     ap.add_argument("--n-test", type=int, default=1_000)
-    ap.add_argument("--engines", nargs="+", default=["loop", "vectorized"],
+    ap.add_argument("--engines", nargs="+",
+                    default=ENGINE_DEFAULTS["engines"],
                     choices=sorted(ENGINES),
                     help="speedup columns are relative to the first")
-    ap.add_argument("--buckets", type=int, default=3,
+    ap.add_argument("--buckets", type=int,
+                    default=ENGINE_DEFAULTS["buckets"],
                     help="size-bucket count for the 'vectorized' engine "
                          "(the 'unbucketed' engine pins 1)")
     ap.add_argument("--sweep", action="store_true",
@@ -500,12 +690,19 @@ def main():
                          "attack application vs the per-malicious-client "
                          "dispatch loop, plus a 4-scenario heterogeneous "
                          "sweep; writes results/BENCH_attacks.json")
+    ap.add_argument("--defenses", action="store_true",
+                    help="benchmark the defense plane: robust aggregators "
+                         "host vs batched, vs K and vs n_malicious at "
+                         "K=64; writes results/BENCH_defenses.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny asserted run of both benchmarks (CI gate)")
+                    help="tiny asserted run of every benchmark (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.defenses:
+        bench_defenses()
         return
     if args.attacks:
         bench_attacks(*ATTACK_DEFAULTS)
@@ -520,13 +717,26 @@ def main():
 
     print("engine,K,n_train,s_per_round,median_round_s,"
           "speedup,median_speedup,pad_waste")
+    rows_json = []
     for k in args.ks:
         out = bench_k(k, args.n_train, args.n_test, args.rounds,
                       args.seeds, args.engines, args.buckets)
+        for name in args.engines:
+            mean, med, _, waste = out[name]
+            rows_json.append({"engine": name, "K": k,
+                              "s_per_round": round(mean, 3),
+                              "median_round_s": round(med, 3),
+                              "pad_waste": round(waste, 3)
+                              if np.isfinite(waste) else None})
         base, last = args.engines[0], args.engines[-1]
         if base != last:
             print(f"# K={k}: {last} per-round speedup over {base} "
                   f"{out[base][0] / out[last][0]:.2f}x", file=sys.stderr)
+    write_bench_json(
+        "engines", {"bench": "cohort_engine_per_round", "rows": rows_json},
+        canonical=(args.n_train is None
+                   and all(getattr(args, k) == v
+                           for k, v in ENGINE_DEFAULTS.items())))
 
 
 if __name__ == "__main__":

@@ -1,11 +1,17 @@
 """Beyond-paper robustness extensions (the paper's §VI future-work items),
-now a threat-model MATRIX: every scenario family from core/attacks.py —
-model poisoning (sign-flip / boosted), free-riders (zero and stale
-updates), dishonest reporting on top of a label flip, feature noise, and
-intermittent / colluding malicious schedules — runs against DQS and the
-random baseline as ONE stacked ``run_sweep`` (scenarios are just another
-slice of the batched cohort + control planes). Plus the original
-adaptive-omega and K=100 scale studies.
+now a threat-model x DEFENSE matrix: every scenario family from
+core/attacks.py — model poisoning (sign-flip / boosted), free-riders
+(zero and stale updates), dishonest reporting on top of a label flip,
+feature noise, and intermittent / colluding malicious schedules — runs
+against DQS and the random baseline, each cell undefended AND under the
+``trimmed_mean+validation`` defense (core/defenses.py), as ONE stacked
+``run_sweep`` (scenarios and defenses are just more slices of the batched
+cohort + control planes). Plus the original adaptive-omega and K=100
+scale studies.
+
+The headline question (DESIGN.md §8 -> §9): does the validation detector
+turn the feature-noise rep gap positive? The summary prints it and the
+JSON records per-cell ``rep_gap`` / detection precision/recall.
 
     PYTHONPATH=src python examples/robustness_extensions.py [--fast]
 
@@ -49,13 +55,16 @@ SCENARIO_MATRIX = [
 ]
 
 
-def summarize(res, scenario, policy):
-    runs = res.select(scenario=scenario, policy=policy)
+def summarize(res, scenario, policy, defense):
+    runs = res.select(scenario=scenario, policy=policy, defense=defense)
+    curves = res.averaged(("acc", "attack_success", "det_precision",
+                           "det_recall"),
+                          scenario=scenario, policy=policy,
+                          defense=defense)    # NaN-aware cross-seed means
     out = {
-        "acc": [round(float(a), 4) for a in
-                np.mean([r["acc"] for r in runs], 0)],
-        "attack_success": [round(float(a), 4) for a in
-                           np.mean([r["attack_success"] for r in runs], 0)],
+        "acc": [round(float(a), 4) for a in curves["acc"]],
+        "attack_success": [round(float(a), 4)
+                           for a in curves["attack_success"]],
         "recovery_rounds": [r["recovery_rounds"] for r in runs],
         "rep_gap": round(float(np.mean(
             [r["final_reputation_honest"] - r["final_reputation_malicious"]
@@ -63,10 +72,17 @@ def summarize(res, scenario, policy):
         "malicious_selected_mean": [round(float(m), 2) for m in np.mean(
             [r["malicious_selected"] for r in runs], 0)],
     }
-    tag = f"{scenario}_{policy}"
-    print(f"{tag:40s} acc={out['acc'][-1]:.3f} repgap={out['rep_gap']:+.3f} "
+    if defense != "none":
+        rnd = lambda p: round(float(p), 3) if np.isfinite(p) else None
+        out["n_flagged"] = [int(n) for n in np.sum(
+            [r["n_flagged"] for r in runs], 0)]
+        out["det_precision"] = [rnd(p) for p in curves["det_precision"]]
+        out["det_recall"] = [rnd(p) for p in curves["det_recall"]]
+    tag = f"{scenario}_{policy}" + ("" if defense == "none"
+                                    else "_defended")
+    print(f"{tag:46s} acc={out['acc'][-1]:.3f} repgap={out['rep_gap']:+.3f} "
           f"malsel_last={out['malicious_selected_mean'][-1]}")
-    return out
+    return tag, out
 
 
 def curve(tag, seeds, **kw):
@@ -95,15 +111,27 @@ def main():
     results = {}
     t0 = time.time()
 
-    # 1) the whole threat-model matrix x {dqs, random} in ONE stacked
-    # sweep: 9 scenarios x 2 policies x 2 seeds = 36 runs, scheduled by
-    # one batched control-plane call and trained as stacked cohorts
+    # 1) the whole threat-model x defense matrix in ONE stacked sweep:
+    # 9 scenarios x 2 defenses x 2 policies x 2 seeds = 72 runs,
+    # scheduled by one batched control-plane call per round, trained as
+    # stacked cohorts, partitions shared across the defense axis
+    defenses = ["none", "trimmed_mean+validation"]
     res = run_sweep(["dqs", "random"], seeds=seeds,
-                    scenarios=SCENARIO_MATRIX, cfg=cfg5, **kw)
+                    scenarios=SCENARIO_MATRIX, defenses=defenses,
+                    cfg=cfg5, **kw)
     for scn in SCENARIO_MATRIX:
-        for policy in ("dqs", "random"):
-            results[f"{scn.name}_{policy}"] = summarize(
-                res, scn.name, policy)
+        for defense in defenses:
+            for policy in ("dqs", "random"):
+                tag, out = summarize(res, scn.name, policy, defense)
+                results[tag] = out
+
+    # the DESIGN.md §8 -> §9 question: does the validation detector turn
+    # the feature-noise rep gap positive?
+    fn_un = results["feature_noise_dqs"]["rep_gap"]
+    fn_def = results["feature_noise_dqs_defended"]["rep_gap"]
+    print(f"\nfeature-noise rep gap: undefended {fn_un:+.3f} -> "
+          f"defended {fn_def:+.3f} "
+          f"({'REVERSED' if fn_un < 0 < fn_def else 'not reversed'})")
 
     # 2) adaptive omega vs fixed (paper §V-B.2 suggestion)
     results["fixed_omega"] = curve(

@@ -285,6 +285,11 @@ class FeelConfig:
     # recovered once the source->target attack success rate stays below
     # this threshold (feeds ``recovery_rounds``)
     recovery_threshold: float = 0.5
+    # default defense policy (core/defenses.py registry name) — the server
+    # resolves it when no explicit ``defense=`` is given, so a config can
+    # pin a defended baseline; sweeps vary defenses per run via
+    # ``run_sweep(defenses=[...])`` while sharing one config
+    defense: str = "none"
     # client compute model (Eq. 6). zeta/f are unspecified in the paper;
     # calibrated so t_train spans [~1s, ~375s] against T=300s — large datasets
     # on slow UEs can blow the deadline, which is exactly the paper's

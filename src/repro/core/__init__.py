@@ -4,7 +4,9 @@ diversity (Eq. 2) + reputation (Eq. 1) -> data-quality value (Eq. 3);
 wireless cost model (Eq. 4-7, 9); greedy-knapsack scheduler (Algorithm 2)
 with baseline policies; label-flip poisoning (§III-B.1) generalized to a
 pluggable threat-model plane (core/attacks.py: scenario registry, masked
-batched application, host oracles); batched JAX control plane
+batched application, host oracles); a matching defense plane
+(core/defenses.py: robust aggregators + validation detection, each with
+a host oracle and a batched twin); batched JAX control plane
 (core/control.py) scheduling all runs of a sweep in one vmapped call,
 with the numpy implementations as the bit-parity oracle.
 """
@@ -17,6 +19,12 @@ from repro.core.attacks import (SCENARIOS, AttackScenario, FeatureNoise,
                                 recovery_rounds, register,
                                 reputation_gap)
 from repro.core.control import (ControlState, finalize_runs, schedule_runs)
+from repro.core.defenses import (DEFENSES, DefensePolicy, DefenseStats,
+                                 Krum, Median, NO_DEFENSE, NormClip,
+                                 TrimmedMean, ValidationDetector,
+                                 as_defense, detection_stats, krum,
+                                 median, norm_clip, trimmed_mean,
+                                 validation, with_validation)
 from repro.core.diversity import (diversity_index, diversity_index_eq2,
                                   diversity_index_rows, gini_simpson,
                                   normalize, normalize_last,
@@ -43,6 +51,10 @@ __all__ = [
     "model_poison", "multi_flip", "recovery_rounds", "register",
     "reputation_gap",
     "ControlState", "finalize_runs", "schedule_runs",
+    "DEFENSES", "DefensePolicy", "DefenseStats", "Krum", "Median",
+    "NO_DEFENSE", "NormClip", "TrimmedMean", "ValidationDetector",
+    "as_defense", "detection_stats", "krum", "median", "norm_clip",
+    "trimmed_mean", "validation", "with_validation",
     "diversity_index", "diversity_index_eq2", "diversity_index_rows",
     "gini_simpson", "normalize", "normalize_last", "normalize_rows",
     "EASY_PAIR", "HARD_PAIR", "LabelFlipAttack", "pick_malicious",

@@ -317,11 +317,11 @@ def schedule_runs(state: ControlState, gains: np.ndarray,
 
 
 @jax.jit
-def _finalize_kernel(rep, ages, sel_mask, acc_local, acc_test,
+def _finalize_kernel(rep, ages, sel_mask, acc_local, acc_test, pen,
                      eta, beta1, beta2):
-    """Eq. 1 + staleness for every run in one call."""
+    """Eq. 1 (+ defense trust penalty) + staleness for every run."""
     rep = reputation_update_eq1(rep, sel_mask, acc_local, acc_test,
-                                eta, beta1, beta2)
+                                eta, beta1, beta2, penalty=pen)
     ages = jnp.where(sel_mask > 0, 1.0, ages + 1.0)
     return rep, ages
 
@@ -329,9 +329,14 @@ def _finalize_kernel(rep, ages, sel_mask, acc_local, acc_test,
 def finalize_runs(state: ControlState, sels: List[np.ndarray],
                   acc_locals: List[np.ndarray],
                   acc_tests: List[np.ndarray],
+                  penalties: Optional[List] = None,
                   kernel: Optional[str] = None) -> None:
     """Eq. 1 reputation + staleness of all R runs in one call, written back
     into ``state`` (callers then ``push`` to the servers).
+
+    ``penalties`` — optional per-run defense trust penalties (aligned with
+    ``sels``; entries may be None): the validation detector's extra
+    subtracted Eq. 1 term (core/defenses.py, DESIGN.md §9).
 
     The hybrid layout applies Eq. 1 as batched numpy with the cohort
     average computed exactly like the host tracker (np.mean over the
@@ -344,24 +349,27 @@ def finalize_runs(state: ControlState, sels: List[np.ndarray],
     mask = np.zeros((R, K))
     al = np.zeros((R, K))
     at = np.zeros((R, K))
+    pen = np.zeros((R, K))
     for i, (sel, a, t) in enumerate(zip(sels, acc_locals, acc_tests)):
         mask[i, sel] = 1.0
         al[i, sel] = a
         at[i, sel] = t
+        if penalties is not None and penalties[i] is not None:
+            pen[i, sel] = penalties[i]
     if (kernel or default_kernel()) == "hybrid":
         # cohort average computed exactly like the host tracker (np.mean
         # over the compressed cohort, not a full-K masked sum)
         avg = np.array([[np.mean(a) if len(a) else 0.0]
                         for a in acc_locals])
         delta = cfg.eta * (cfg.beta1 * (al - avg)
-                           + cfg.beta2 * (al - at))
+                           + cfg.beta2 * (al - at)) + pen
         new = np.clip(state.reputations - delta, 0.0, 1.0)
         state.reputations = np.where(mask > 0, new, state.reputations)
         state.ages = np.where(mask > 0, 1.0, state.ages + 1.0)
         return
     with enable_x64():
         rep, ages = _finalize_kernel(
-            state.reputations, state.ages, mask, al, at,
+            state.reputations, state.ages, mask, al, at, pen,
             cfg.eta, cfg.beta1, cfg.beta2)
     # np.array (not asarray): device outputs give read-only numpy views,
     # and these buffers are written in-place by the next round's pull()

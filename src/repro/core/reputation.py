@@ -34,7 +34,7 @@ from repro.configs.base import FeelConfig
 
 
 def reputation_update_eq1(values, sel_mask, acc_local, acc_test,
-                          eta, beta1, beta2):
+                          eta, beta1, beta2, penalty=None):
     """Eq. 1 as a pure jnp function over (..., K) arrays (batched control
     plane; the host oracle is ``ReputationTracker.update``).
 
@@ -43,12 +43,18 @@ def reputation_update_eq1(values, sel_mask, acc_local, acc_test,
     unscheduled UEs are ignored). The cohort average of Eq. 1's beta1 term
     runs over the participants only, and only participants' reputations
     move (then clip to [0, 1], matching the tracker).
+
+    ``penalty`` — optional (..., K) extra subtracted term inside the same
+    clip: the defense plane's validation-detector trust penalty
+    (core/defenses.py, DESIGN.md §9). Zero rows leave Eq. 1 untouched.
     """
     m = sel_mask.astype(values.dtype)
     n = m.sum(-1, keepdims=True)
     avg = (acc_local * m).sum(-1, keepdims=True) / jnp.maximum(n, 1.0)
     delta = eta * (beta1 * (acc_local - avg)
                    + beta2 * (acc_local - acc_test))
+    if penalty is not None:
+        delta = delta + penalty
     return jnp.where(m > 0, jnp.clip(values - delta, 0.0, 1.0), values)
 
 
@@ -58,12 +64,15 @@ class ReputationTracker:
         self.values = np.ones(cfg.n_ues)
 
     def update(self, participants: np.ndarray,
-               acc_local: np.ndarray, acc_test: np.ndarray) -> np.ndarray:
+               acc_local: np.ndarray, acc_test: np.ndarray,
+               penalty=None) -> np.ndarray:
         """Apply Eq. 1 to the participating UEs of this round.
 
         participants — indices; acc_local — self-reported accuracies
         (len == len(participants)); acc_test — server-measured accuracies of
-        the uploaded models on the held-out test set.
+        the uploaded models on the held-out test set; penalty — optional
+        per-participant defense trust penalty, subtracted inside the same
+        clip (see ``reputation_update_eq1``).
         """
         cfg = self.cfg
         if len(participants) == 0:
@@ -71,6 +80,8 @@ class ReputationTracker:
         avg_acc = float(np.mean(acc_local))
         delta = cfg.eta * (cfg.beta1 * (acc_local - avg_acc)
                            + cfg.beta2 * (acc_local - acc_test))
+        if penalty is not None:
+            delta = delta + penalty
         self.values[participants] = np.clip(
             self.values[participants] - delta, 0.0, 1.0)
         return self.values

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import FeelConfig
 from repro.core import attacks as atk
+from repro.core import defenses as dfs
 from repro.core import (ReputationTracker, WirelessModel, adaptive_weights,
                         data_quality_value, diversity_index, dqs_schedule,
                         gini_simpson, top_value_schedule)
@@ -83,6 +84,16 @@ class RoundLog:
     # so ``objective`` is reported as 0.0 for forced rounds — the forced
     # UE's V_k must not be credited to the scheduler.
     forced: bool = False
+    # defense-plane metrics (core/defenses.py, DESIGN.md §9): what the
+    # round's DefensePolicy did — norm-clipped / aggregation-rejected
+    # upload counts, validation-detector flags, and detection
+    # precision/recall against the ground-truth malicious mask (metrics
+    # only; the defense itself never sees the truth)
+    n_clipped: int = 0
+    n_rejected: int = 0
+    n_flagged: int = 0
+    det_precision: float = float("nan")
+    det_recall: float = float("nan")
 
 
 @dataclasses.dataclass
@@ -157,6 +168,12 @@ class FeelServer:
     watched (source, target) metrics. Supersedes the legacy
     ``model_poison``/``lie_boost`` knobs (kept for back-compat and
     normalized into an equivalent scenario).
+    defense: a ``core.defenses.DefensePolicy`` (or registry name) — the
+    server-side counter-measure plane (DESIGN.md §9). Its robust
+    aggregator replaces/augments FedAvg in ``_aggregate_cohort`` (both
+    engines); its validation detector adds one extra vmapped eval per
+    round and feeds a trust penalty into Eq. 1 in ``_finalize_round``.
+    None defers to ``cfg.defense`` (default ``"none"``).
 
     The underscore round-phase methods (_schedule_round, _cohort_parts,
     _merge_cohort, _apply_attacks, _eval_masks, _aggregate_cohort,
@@ -178,7 +195,8 @@ class FeelServer:
                  pad_to: Optional[int] = None, n_buckets: int = 3,
                  cohort_data: Optional[CohortData] = None,
                  control: str = "batched",
-                 scenario: Optional[atk.AttackScenario] = None):
+                 scenario: Optional[atk.AttackScenario] = None,
+                 defense=None):
         assert engine in ("vectorized", "loop"), engine
         assert control in ("batched", "host"), control
         self.control = control
@@ -247,6 +265,28 @@ class FeelServer:
         self._test_mask_arr = np.stack(self._test_masks).astype(np.float32)
         self._tx = jax.numpy.asarray(test.x)
         self._ty = jax.numpy.asarray(test.y)
+        # defense plane (core/defenses.py, DESIGN.md §9): robust
+        # aggregation replaces/augments FedAvg in _aggregate_cohort, the
+        # validation detector scores every upload on a held-out split
+        # (the first n_val test rows) and its anomaly feeds Eq. 1 as a
+        # trust penalty in _finalize_round
+        self.defense = dfs.as_defense(defense if defense is not None
+                                      else cfg.defense)
+        det = self.defense.detector
+        if det is not None:
+            # validation split: the first n_val test rows, restricted per
+            # UE to the classes it claims to hold (the same masking
+            # argument as Eq. 1's acc_test, DESIGN.md §2 — an unmasked
+            # score cannot tell an honest non-IID UE from a noise UE).
+            # The detector's novelty over Eq. 1 is using the ABSOLUTE
+            # cohort-relative level of this score, not a report gap.
+            self._n_val = min(det.n_val, len(test.y))
+            val_rows = (np.arange(len(test.y)) < self._n_val)
+            self._val_masks = [m & val_rows for m in self._test_masks]
+            arr = self._test_mask_arr * val_rows.astype(np.float32)[None]
+            self._val_mask_dev = jnp.asarray(
+                np.concatenate([arr, np.zeros_like(arr[:1])]))
+        self._def_stats = dfs.DefenseStats()   # refreshed every round
         # vectorized-engine client layout: injected (sweep-shared) or built
         # lazily on first use (see CohortData)
         self._cohort_data = cohort_data
@@ -292,8 +332,7 @@ class FeelServer:
     # Per-cohort execution engines: both return the stacked/list client
     # results as (acc_local, acc_test, aggregate-and-assign side effect).
     # ------------------------------------------------------------------ #
-    def _run_cohort_loop(self, sel: np.ndarray, t: int) -> Tuple[np.ndarray,
-                                                                 np.ndarray]:
+    def _run_cohort_loop(self, sel: np.ndarray, t: int):
         cfg = self.cfg
         reports = [local_train(self.clients[k], self.params,
                                cfg.local_epochs, self.lr,
@@ -321,9 +360,30 @@ class FeelServer:
                 p, jax.numpy.asarray(self.test.x[m]),
                 jax.numpy.asarray(self.test.y[m]))) if m.any() else 0.0
 
-        self.params = fedavg(params_list,
-                             [r.n_samples for r in reports])
-        return acc_local, acc_test
+        # defense plane, host-oracle side: per-client validation pass
+        # (upload AND start-of-round global model on each UE's masked val
+        # split) + compressed-matrix robust aggregation (core/defenses.py)
+        acc_val = None
+        if self.defense.detector is not None:
+            acc_val = np.zeros((2, len(params_list)))
+            for i, (p, k) in enumerate(zip(params_list, sel)):
+                m = self._val_masks[k]
+                if m.any():
+                    xs = jax.numpy.asarray(self.test.x[m])
+                    ys = jax.numpy.asarray(self.test.y[m])
+                    acc_val[0, i] = float(mlp_accuracy(p, xs, ys))
+                    acc_val[1, i] = float(mlp_accuracy(self.params, xs,
+                                                       ys))
+        agg = self.defense.aggregator
+        weights = [r.n_samples for r in reports]
+        if agg is None:
+            self.params = fedavg(params_list, weights)
+            self._def_stats = dfs.DefenseStats()
+        else:
+            self.params, self._def_stats = dfs.aggregate_host(
+                agg, params_list, np.asarray(weights, float), self.params,
+                self.cfg.n_malicious)
+        return acc_local, acc_test, acc_val
 
     def _ensure_cohort_data(self) -> CohortData:
         # resident on device once; per-round cohort stacking is then a
@@ -438,14 +498,24 @@ class FeelServer:
         return jnp.take(cd.mask_dev, idx, axis=0)
 
     def _aggregate_cohort(self, sel: np.ndarray, stacked_p) -> None:
-        """ONE fedavg_stacked call whose weights span all buckets."""
+        """ONE fedavg_stacked call whose weights span all buckets — or,
+        under a defense with a robust aggregator, the batched defended
+        aggregation over the padded (K_pad, P) flattened-update layout
+        (core/defenses.py, DESIGN.md §9; stats land in ``_def_stats``
+        for ``_log_round``)."""
         cd = self._ensure_cohort_data()
         weights = np.zeros(jax.tree.leaves(stacked_p)[0].shape[0])
         weights[:sel.size] = cd.sizes[sel]
-        self.params = fedavg_stacked(stacked_p, weights)
+        agg = self.defense.aggregator
+        if agg is None:
+            self.params = fedavg_stacked(stacked_p, weights)
+            self._def_stats = dfs.DefenseStats()
+        else:
+            self.params, self._def_stats = dfs.aggregate_stacked(
+                agg, stacked_p, weights, self.params, sel.size,
+                self.cfg.n_malicious)
 
-    def _run_cohort_vectorized(self, sel: np.ndarray,
-                               t: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _run_cohort_vectorized(self, sel: np.ndarray, t: int):
         cfg = self.cfg
         cd = self._ensure_cohort_data()
         n = sel.size
@@ -474,8 +544,33 @@ class FeelServer:
         acc_test = np.asarray(
             cohort.cohort_eval(stacked_p, self._tx, self._ty,
                                self._eval_masks(sel, n_pad)), float)[:n]
+        acc_val = self._eval_validation(stacked_p, sel)
         self._aggregate_cohort(sel, stacked_p)
-        return acc_local, acc_test
+        return acc_local, acc_test, acc_val
+
+    def _val_eval_masks(self, sel: np.ndarray, n_pad: int) -> jax.Array:
+        """(n_pad, T) per-UE class-masked validation-split eval masks."""
+        idx = jnp.asarray(np.concatenate(
+            [sel, np.full(n_pad - sel.size, len(self.clients), sel.dtype)]))
+        return jnp.take(self._val_mask_dev, idx, axis=0)
+
+    def _eval_validation(self, stacked_p, sel: np.ndarray
+                         ) -> Optional[np.ndarray]:
+        """Defense detector: the ONE extra vmapped eval — every uploaded
+        model AND the start-of-round global model scored on the held-out
+        validation split restricted to each UE's claimed classes (same
+        ``cohort_eval`` machinery; (2, n): uploads row, global row)."""
+        if self.defense.detector is None:
+            return None
+        n = sel.size
+        n_pad = jax.tree.leaves(stacked_p)[0].shape[0]
+        vm = self._val_eval_masks(sel, n_pad)
+        both = cohort.merge_stacks(
+            [stacked_p, cohort.broadcast_params(self.params, n_pad)])
+        acc = np.asarray(
+            cohort.cohort_eval(both, self._tx, self._ty,
+                               jnp.concatenate([vm, vm])), float)
+        return np.stack([acc[:n], acc[n_pad:n_pad + n]])
 
     # ------------------------------------------------------------------ #
     # Round phases. ``run_round`` composes them; the batched sweep runner
@@ -542,23 +637,44 @@ class FeelServer:
                          value=values[0])
         return values[0], sched, sched.selected, bool(forced[0])
 
-    def _train_cohort(self, sel: np.ndarray, t: int) -> Tuple[np.ndarray,
-                                                              np.ndarray]:
+    def _train_cohort(self, sel: np.ndarray, t: int):
+        """(acc_local, acc_test, acc_val) of the round's cohort —
+        ``acc_val`` is None unless the defense has a validation detector."""
         if self.engine == "vectorized":
             return self._run_cohort_vectorized(sel, t)
         return self._run_cohort_loop(sel, t)
 
+    def _detect(self, sel: np.ndarray, acc_val) -> Optional[np.ndarray]:
+        """Validation-detector phase: anomaly scores -> Eq. 1 trust
+        penalties (returned, aligned with ``sel``) + detection metrics
+        against the ground-truth malicious mask (merged into
+        ``_def_stats`` for ``_log_round`` — metrics only)."""
+        det = self.defense.detector
+        if det is None or acc_val is None or sel.size == 0:
+            return None
+        anomaly = det.anomaly(acc_val)
+        flags = anomaly > 0
+        st = self._def_stats
+        st.n_flagged = int(flags.sum())
+        st.det_precision, st.det_recall = dfs.detection_stats(
+            flags, self._mal_mask[sel])
+        return det.weight * anomaly
+
     def _finalize_round(self, t: int, values, sched, sel, forced,
                         acc_local, acc_test, g_acc, src_acc,
-                        atk_succ=float("nan")) -> RoundLog:
-        """Alg. 1 lines 15-16 + logging: reputation, staleness, RoundLog."""
+                        atk_succ=float("nan"), acc_val=None) -> RoundLog:
+        """Alg. 1 lines 15-16 + logging: detector penalty, reputation,
+        staleness, RoundLog."""
+        penalty = self._detect(sel, acc_val)
         if self.control == "batched":
             st = self._control_state()
             st.pull([self])
-            ctl.finalize_runs(st, [sel], [acc_local], [acc_test])
+            ctl.finalize_runs(st, [sel], [acc_local], [acc_test],
+                              penalties=[penalty])
             st.push([self])
         else:
-            self.reputation.update(sel, acc_local, acc_test)
+            self.reputation.update(sel, acc_local, acc_test,
+                                   penalty=penalty)
             # ages: selected reset, others grow (staleness metric of Eq. 2)
             self.ages += 1.0
             self.ages[sel] = 1.0
@@ -570,6 +686,7 @@ class FeelServer:
         """Append the RoundLog for a finalized round (reputation/ages
         already updated — the batched sweep runner updates ALL runs in one
         ``control.finalize_runs`` call and then logs per run)."""
+        ds = self._def_stats
         log = RoundLog(
             round=t, selected=sel, global_acc=g_acc,
             n_malicious_selected=sum(self.clients[k].malicious for k in sel),
@@ -579,7 +696,10 @@ class FeelServer:
             attack_success=atk_succ,
             rep_gap=atk.reputation_gap(self.reputation.values,
                                        self._mal_mask),
-            forced=forced)
+            forced=forced,
+            n_clipped=ds.n_clipped, n_rejected=ds.n_rejected,
+            n_flagged=ds.n_flagged, det_precision=ds.det_precision,
+            det_recall=ds.det_recall)
         self.logs.append(log)
         return log
 
@@ -604,11 +724,11 @@ class FeelServer:
 
     def run_round(self, t: int) -> RoundLog:
         values, sched, sel, forced = self._schedule_round(t)
-        acc_local, acc_test = self._train_cohort(sel, t)
+        acc_local, acc_test, acc_val = self._train_cohort(sel, t)
         g_acc, src_acc, atk_succ = self._global_metrics()
         return self._finalize_round(t, values, sched, sel, forced,
                                     acc_local, acc_test, g_acc, src_acc,
-                                    atk_succ)
+                                    atk_succ, acc_val)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         for t in range(rounds or self.cfg.rounds):

@@ -26,7 +26,12 @@ axis. Every run reproduces its sequential ``run_experiment`` twin exactly
 The threat-model axis (``scenarios=[...]``) runs heterogeneous attack
 scenarios — label-flip variants, feature noise, free-riders, model
 poisoning, colluding schedules (core/attacks.py, DESIGN.md §8) — in the
-same stacked sweep; ``attack_pairs`` survives as a back-compat shim.
+same stacked sweep; ``attack_pairs`` survives as a back-compat shim. The
+defense axis (``defenses=[...]``) crosses every scenario with a
+server-side counter-measure (core/defenses.py, DESIGN.md §9: robust
+aggregation + validation detection) at zero extra partition/layout cost —
+defenses are deterministic, so (scenario x defense) cells share the
+scenario's partitions and RNG streams.
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ import numpy as np
 from repro.configs.base import FeelConfig
 from repro.core import attacks as atk
 from repro.core import control as ctl
+from repro.core import defenses as dfs
 from repro.core.poisoning import pick_malicious
 from repro.core.scheduler import Schedule
 from repro.data.partition import label_histogram, partition
@@ -61,7 +67,7 @@ def run_experiment(policy: str = "dqs",
                    lie_boost: float = 0.0,
                    engine: str = "vectorized",
                    control: str = "batched",
-                   scenario=None) -> Dict:
+                   scenario=None, defense=None) -> Dict:
     """One FEEL experiment; returns the per-round curves + run summary.
 
     Threat model — either an explicit ``scenario`` (an
@@ -80,6 +86,11 @@ def run_experiment(policy: str = "dqs",
 
     ``scenario`` supersedes the legacy knobs (they must stay at their
     defaults when it is given).
+
+    ``defense`` — a ``core.defenses.DefensePolicy`` spec (object or
+    registry name; None defers to ``cfg.defense``): the server-side
+    counter-measure plane (robust aggregation + validation detection,
+    DESIGN.md §9).
     """
     cfg = cfg or FeelConfig()
     if omega is not None:
@@ -100,16 +111,22 @@ def run_experiment(policy: str = "dqs",
                         None if scn.benign else malicious, scn.data)
     server = FeelServer(cfg, clients, test, rng, policy=policy,
                         adaptive_omega=adaptive_omega, scenario=scn,
-                        engine=engine, control=control)
+                        engine=engine, control=control, defense=defense)
     logs = server.run(rounds)
     return {
         "scenario": scn.name,
+        "defense": server.defense.name,
         "acc": [l.global_acc for l in logs],
         "source_acc": [l.source_acc for l in logs],
         "attack_success": [l.attack_success for l in logs],
         "malicious_selected": [l.n_malicious_selected for l in logs],
         "objective": [l.objective for l in logs],
         "rep_gap": [l.rep_gap for l in logs],
+        "n_clipped": [l.n_clipped for l in logs],
+        "n_rejected": [l.n_rejected for l in logs],
+        "n_flagged": [l.n_flagged for l in logs],
+        "det_precision": [l.det_precision for l in logs],
+        "det_recall": [l.det_recall for l in logs],
         "recovery_rounds": atk.recovery_rounds(
             [l.attack_success for l in logs], cfg.recovery_threshold),
         "final_reputation_malicious": float(
@@ -125,40 +142,67 @@ def run_experiment(policy: str = "dqs",
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass
 class SweepResult:
-    """Tidy results of a (policies x seeds x scenarios) sweep.
+    """Tidy results of a (policies x seeds x scenarios x defenses) sweep.
 
-    rows — one record per (policy, seed, scenario, round) with the
-        per-round metrics (acc, source_acc, attack_success,
-        malicious_selected, objective, rep_gap, forced).
+    rows — one record per (policy, seed, scenario, defense, round) with
+        the per-round metrics (acc, source_acc, attack_success,
+        malicious_selected, objective, rep_gap, forced, and the defense
+        metrics n_clipped / n_rejected / n_flagged / det_precision /
+        det_recall).
     runs — one record per run, shaped exactly like ``run_experiment``'s
-        return value plus the (policy, seed, scenario, attack_pair) key
-        (``attack_pair`` is the scenario's watched pair, None if it has
-        none — kept for back-compat with pair-keyed callers).
+        return value plus the (policy, seed, scenario, defense,
+        attack_pair) key (``attack_pair`` is the scenario's watched pair,
+        None if it has none — kept for back-compat with pair-keyed
+        callers).
     """
     rows: List[Dict]
     runs: List[Dict]
 
     def select(self, **key) -> List[Dict]:
-        """Run summaries matching e.g. policy=..., seed=..., scenario=..."""
+        """Run summaries matching e.g. policy=..., seed=..., scenario=...,
+        defense=..."""
         return [r for r in self.runs
                 if all(r[k] == v for k, v in key.items())]
 
     def mean_curve(self, field: str = "acc", **key) -> np.ndarray:
         """Per-round mean of ``field`` over the runs matching ``key``
-        (the paper's average-over-independent-runs reduction)."""
+        (the paper's average-over-independent-runs reduction).
+
+        NaN-aware: watch-metric entries (attack_success / source_acc /
+        det_precision / det_recall) are NaN where undefined — a watch-less
+        scenario, a round with nothing flagged — and must not poison the
+        cross-seed mean of the runs that DO define them. A round where
+        every matched run is NaN stays NaN (computed without numpy's
+        all-NaN RuntimeWarning).
+        """
         runs = self.select(**key)
         assert runs, key
-        return np.mean([r[field] for r in runs], axis=0)
+        a = np.asarray([r[field] for r in runs], float)
+        finite = np.isfinite(a)
+        n = finite.sum(axis=0)
+        s = np.where(finite, a, 0.0).sum(axis=0)
+        return np.where(n > 0, s / np.maximum(n, 1), np.nan)
+
+    def averaged(self, fields: Sequence[str] = ("acc", "source_acc",
+                                                "attack_success",
+                                                "malicious_selected",
+                                                "rep_gap"),
+                 **key) -> Dict[str, np.ndarray]:
+        """NaN-aware mean curves of several fields at once (the standard
+        averaged-over-seeds reduction of a sweep slice)."""
+        return {f: self.mean_curve(f, **key) for f in fields}
 
 
 class _SweepRun:
-    """One (policy, seed, scenario) run's server + in-flight round state."""
+    """One (policy, seed, scenario, defense) run's server + in-flight
+    round state."""
 
-    def __init__(self, policy, seed, scenario, server, malicious,
+    def __init__(self, policy, seed, scenario, defense, server, malicious,
                  watch_mask, ty_target):
         self.policy = policy
         self.seed = seed
         self.scenario = scenario
+        self.defense = defense
         self.pair = scenario.watch         # back-compat attack_pair key
         self.server = server
         self.malicious = malicious
@@ -169,6 +213,7 @@ class _SweepRun:
         self.stacked = None                # merged cohort params (sel order)
         self.acc_local = None
         self.acc_test = None
+        self.acc_val = None                # detector validation accuracies
         self.g_acc = float("nan")
         self.src_acc = float("nan")
         self.atk_succ = float("nan")
@@ -178,6 +223,7 @@ class _SweepRun:
         return {
             "policy": self.policy, "seed": self.seed,
             "scenario": self.scenario.name,
+            "defense": self.defense.name,
             "attack_pair": self.pair,
             "acc": [l.global_acc for l in s.logs],
             "source_acc": [l.source_acc for l in s.logs],
@@ -186,6 +232,11 @@ class _SweepRun:
             "objective": [l.objective for l in s.logs],
             "rep_gap": [l.rep_gap for l in s.logs],
             "forced": [l.forced for l in s.logs],
+            "n_clipped": [l.n_clipped for l in s.logs],
+            "n_rejected": [l.n_rejected for l in s.logs],
+            "n_flagged": [l.n_flagged for l in s.logs],
+            "det_precision": [l.det_precision for l in s.logs],
+            "det_recall": [l.det_recall for l in s.logs],
             "recovery_rounds": atk.recovery_rounds(
                 [l.attack_success for l in s.logs],
                 s.cfg.recovery_threshold),
@@ -201,6 +252,7 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               attack_pairs: Sequence[Tuple[int, int]] = ((6, 2),),
               cfg: Optional[FeelConfig] = None, *,
               scenarios: Optional[Sequence] = None,
+              defenses: Optional[Sequence] = None,
               n_train: int = 50_000, n_test: int = 10_000,
               omega: Optional[Tuple[float, float]] = None,
               adaptive_omega: bool = False,
@@ -212,7 +264,16 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               control: str = "batched",
               n_buckets: int = 3,
               stack_runs: bool = True) -> SweepResult:
-    """Run the full (policies x seeds x scenarios) grid batched.
+    """Run the full (policies x seeds x scenarios x defenses) grid batched.
+
+    The defense axis: ``defenses`` is a sequence of
+    ``core.defenses.DefensePolicy`` specs (objects or registry names;
+    None = the single ``cfg.defense`` default). Defenses are
+    deterministic server-side counter-measures, so every (scenario,
+    defense) cell shares the scenario's partition, device layout and RNG
+    streams — (scenario x defense x policy x seed) runs as ONE stacked
+    sweep with shared partitions, and a defended run's undefended twin
+    differs only through the defense's model/reputation effects.
 
     The threat-model axis: ``scenarios`` is a sequence of
     ``core.attacks.AttackScenario`` specs (scenario objects, registry
@@ -268,6 +329,8 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
             "the scenarios axis supersedes the legacy attack knobs " \
             "(incl. attack_pairs — set AttackScenario.watch instead)"
         scns = [atk.as_scenario(s) for s in scenarios]
+    dfns = ([dfs.as_defense(cfg.defense)] if defenses is None
+            else [dfs.as_defense(d) for d in defenses])
 
     # -- shared caches ------------------------------------------------- #
     data_cache = {s: generate(n_train, n_test, seed=s) for s in set(seeds)}
@@ -307,27 +370,30 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
 
     runs: List[_SweepRun] = []
     for scn in scns:
-        for seed in seeds:
-            for policy in policies:
-                clients, malicious, rng_state = \
-                    part_cache[(seed, scn.data_key())]
-                _, test = data_cache[seed]
-                rng = np.random.default_rng(seed)
-                rng.bit_generator.state = rng_state
-                server = FeelServer(
-                    cfg, clients, test, rng, policy=policy,
-                    adaptive_omega=adaptive_omega, scenario=scn,
-                    engine=engine,
-                    control=control, pad_to=pad_to, n_buckets=n_buckets,
-                    cohort_data=cohort_cache.get((seed, scn.data_key())))
-                watch = ((test.y == scn.watch[0]).astype(np.float32)
-                         if scn.watch else
-                         np.zeros_like(test.y, np.float32))
-                ty_target = (np.full_like(test.y, scn.watch[1])
-                             if scn.watch else test.y)
-                runs.append(_SweepRun(policy, seed, scn, server,
-                                      malicious, watch,
-                                      jnp.asarray(ty_target)))
+        for dfn in dfns:
+            for seed in seeds:
+                for policy in policies:
+                    clients, malicious, rng_state = \
+                        part_cache[(seed, scn.data_key())]
+                    _, test = data_cache[seed]
+                    rng = np.random.default_rng(seed)
+                    rng.bit_generator.state = rng_state
+                    server = FeelServer(
+                        cfg, clients, test, rng, policy=policy,
+                        adaptive_omega=adaptive_omega, scenario=scn,
+                        engine=engine, defense=dfn,
+                        control=control, pad_to=pad_to,
+                        n_buckets=n_buckets,
+                        cohort_data=cohort_cache.get((seed,
+                                                      scn.data_key())))
+                    watch = ((test.y == scn.watch[0]).astype(np.float32)
+                             if scn.watch else
+                             np.zeros_like(test.y, np.float32))
+                    ty_target = (np.full_like(test.y, scn.watch[1])
+                                 if scn.watch else test.y)
+                    runs.append(_SweepRun(policy, seed, scn, dfn, server,
+                                          malicious, watch,
+                                          jnp.asarray(ty_target)))
 
     n_rounds = rounds or cfg.rounds
     if stack_runs and engine == "vectorized":
@@ -344,12 +410,15 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
 
     rows = [
         {"policy": run.policy, "seed": run.seed,
-         "scenario": run.scenario.name, "attack_pair": run.pair,
+         "scenario": run.scenario.name, "defense": run.defense.name,
+         "attack_pair": run.pair,
          "round": l.round, "acc": l.global_acc, "source_acc": l.source_acc,
          "attack_success": l.attack_success,
          "malicious_selected": l.n_malicious_selected,
          "objective": l.objective, "rep_gap": l.rep_gap,
-         "forced": l.forced}
+         "forced": l.forced, "n_clipped": l.n_clipped,
+         "n_rejected": l.n_rejected, "n_flagged": l.n_flagged,
+         "det_precision": l.det_precision, "det_recall": l.det_recall}
         for run in runs for l in run.server.logs]
     return SweepResult(rows=rows, runs=[r.summary() for r in runs])
 
@@ -475,6 +544,27 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         for run, a in zip(group, accs):
             run.acc_test = a
 
+    # -- phase C2: defense validation pass — the detector runs' uploads
+    # AND their start-of-round global models scored on the held-out split
+    # (per-UE class masks) in one extra vmapped eval per seed, through
+    # the same machinery as phase C
+    for group in _by_seed(runs):
+        det_runs = [r for r in group
+                    if r.server.defense.detector is not None]
+        if not det_runs:
+            continue
+        stacks, masks, counts = [], [], []
+        for run in det_runs:
+            n = run.plan[2].size
+            vm = run.server._val_eval_masks(run.plan[2], n)
+            stacks += [run.stacked,
+                       cohort.broadcast_params(run.server.params, n)]
+            masks += [vm, vm]
+            counts += [n, n]
+        accs = _eval_stacked(det_runs[0].server, stacks, masks, counts)
+        for run, v, g in zip(det_runs, accs[::2], accs[1::2]):
+            run.acc_val = np.stack([v, g])
+
     # -- phase D: per-run FedAvg (weights span the run's buckets) ------- #
     for run in runs:
         sel = run.plan[2]
@@ -511,28 +601,36 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
             run.src_acc = float(a[1]) if watched else float("nan")
             run.atk_succ = float(a[2]) if watched else float("nan")
 
-    # -- phase F: reputation / staleness (one batched Eq. 1 call) + logs  #
+    # -- phase F: detector penalties + reputation / staleness (one batched
+    # Eq. 1 call) + logs
     if sweep_ctrl is not None:
         # state was pulled in phase A and nothing touched it since; update
         # every run's reputation/ages in one kernel call, push back, then
-        # log per run against the servers' refreshed state
+        # log per run against the servers' refreshed state. Detector
+        # penalties (host numpy from the phase-C2 accuracies) ride into
+        # the same Eq. 1 kernel call.
         ctl.finalize_runs(sweep_ctrl, [run.plan[2] for run in runs],
                           [run.acc_local for run in runs],
-                          [run.acc_test for run in runs])
+                          [run.acc_test for run in runs],
+                          penalties=[run.server._detect(run.plan[2],
+                                                        run.acc_val)
+                                     for run in runs])
         sweep_ctrl.push([run.server for run in runs])
         for run in runs:
             values, sched, sel, forced = run.plan
             run.server._log_round(t, values, sched, sel, forced,
                                   run.g_acc, run.src_acc, run.atk_succ)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
+            run.acc_val = None
     else:
         for run in runs:
             values, sched, sel, forced = run.plan
             run.server._finalize_round(t, values, sched, sel, forced,
                                        run.acc_local, run.acc_test,
                                        run.g_acc, run.src_acc,
-                                       run.atk_succ)
+                                       run.atk_succ, run.acc_val)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
+            run.acc_val = None
 
 
 def _by_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:

@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels.robust_aggregate import robust_aggregate as _robust
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 from repro.kernels.weighted_aggregate import weighted_aggregate as _agg
 
@@ -58,6 +59,12 @@ def weighted_aggregate(stacked, weights, **kw):
     return _agg(stacked, weights, interpret=_interpret(), **kw)
 
 
+def robust_aggregate(stacked, n, **kw):
+    """Coordinate-wise trimmed mean / median over the stacked-client axis
+    (defense plane, core/defenses.py)."""
+    return _robust(stacked, n, interpret=_interpret(), **kw)
+
+
 def weighted_aggregate_tree(updates_stacked, weights, **kw):
     """Apply the FedAvg kernel leaf-wise over a pytree of stacked updates."""
     def per(leaf):
@@ -68,5 +75,5 @@ def weighted_aggregate_tree(updates_stacked, weights, **kw):
 
 
 __all__ = ["flash_attention", "decode_attention", "ssd_scan", "moe_gemm",
-           "weighted_aggregate", "weighted_aggregate_tree", "use_pallas",
-           "ref"]
+           "weighted_aggregate", "weighted_aggregate_tree",
+           "robust_aggregate", "use_pallas", "ref"]

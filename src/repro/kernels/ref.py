@@ -71,3 +71,18 @@ def weighted_aggregate_ref(stacked, weights):
     w = weights / jnp.maximum(weights.sum(), 1e-9)
     return jnp.einsum("n,nm->m", w.astype(jnp.float32),
                       stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def robust_aggregate_ref(stacked, n, *, trim=0, mode="trimmed_mean"):
+    """(N, M), first n rows real -> (M,) coordinate-wise trimmed mean /
+    median over the client axis (defense plane, core/defenses.py)."""
+    x = stacked.astype(jnp.float32)
+    row = jnp.arange(x.shape[0])[:, None]
+    xs = jnp.sort(jnp.where(row < n, x, jnp.inf), axis=0)
+    if mode == "trimmed_mean":
+        keep = (row >= trim) & (row < n - trim)
+        out = (jnp.sum(jnp.where(keep, xs, 0.0), axis=0)
+               / jnp.float32(max(n - 2 * trim, 1)))
+    else:
+        out = (xs[(n - 1) // 2] + xs[n // 2]) * jnp.float32(0.5)
+    return out.astype(stacked.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU robust aggregation for the defense plane (core/defenses.py):
+coordinate-wise trimmed mean / median over N stacked client updates,
+flattened to (N, M) — the same block layout as ``weighted_aggregate``.
+
+Grid (n_m,) over the parameter dimension; each step loads an (N, block_m)
+tile, pushes the padding rows (row >= n) to the top of a full in-register
+odd-even transposition sort over the small stacked-client axis (N <= ~128
+uploads — the compare-exchange network is statically unrolled, mirroring
+the unrolled weight loop of ``weighted_aggregate``), then reduces the
+selected rank window:
+
+    trimmed_mean — mean of ranks [b, n-b)   (b values dropped per end)
+    median       — midpoint of ranks (n-1)//2 and n//2
+
+``n`` (real row count) and ``b`` (per-end trim count) ride in SMEM, so one
+compiled kernel serves every cohort size at a fixed (N, M) padding. The
+reduction is bandwidth-bound like FedAvg (reads N x M, writes M); the sort
+adds O(N^2) VPU min/max per tile, which stays VMEM-resident at the default
+block_m.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _robust_kernel(nb_ref, x_ref, o_ref, *, n_rows, mode):
+    n = nb_ref[0]
+    b = nb_ref[1]
+    x = x_ref[...].astype(jnp.float32)                    # (N, bm)
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    x = jnp.where(row < n, x, jnp.inf)    # padding sorts past rank n-1
+
+    # full odd-even transposition sort along the client axis: N passes of
+    # statically unrolled compare-exchanges on (bm,) lanes
+    for p in range(n_rows):
+        for i in range(p % 2, n_rows - 1, 2):
+            a, c = x[i], x[i + 1]
+            x = x.at[i].set(jnp.minimum(a, c))
+            x = x.at[i + 1].set(jnp.maximum(a, c))
+
+    if mode == "trimmed_mean":
+        keep = (row >= b) & (row < n - b)
+        acc = jnp.sum(jnp.where(keep, x, 0.0), axis=0)
+        o_ref[...] = (acc / jnp.maximum(n - 2 * b, 1)
+                      .astype(jnp.float32)).astype(o_ref.dtype)
+    else:   # median
+        lo = jnp.sum(jnp.where(row == (n - 1) // 2, x, 0.0), axis=0)
+        hi = jnp.sum(jnp.where(row == n // 2, x, 0.0), axis=0)
+        o_ref[...] = ((lo + hi) * 0.5).astype(o_ref.dtype)
+
+
+def robust_aggregate(stacked, n, *, trim=0, mode="trimmed_mean",
+                     block_m=2048, interpret=False):
+    """stacked (N, M) float, first ``n`` rows real -> (M,) robust reduce.
+
+    trim — rows dropped per end (``mode="trimmed_mean"`` only; the caller
+    computes it from its trim fraction so kernel and oracle agree on the
+    integer rank window). ``n``/``trim`` ride in SMEM — one compiled
+    kernel per (N, M, mode, block_m), NOT per cohort size.
+    """
+    assert mode in ("trimmed_mean", "median"), mode
+    N = stacked.shape[0]
+    assert 0 < n <= N and 0 <= 2 * trim < n, (n, N, trim)
+    return _robust_call(stacked, jnp.asarray([n, trim], jnp.int32),
+                        mode=mode, block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_m",
+                                             "interpret"))
+def _robust_call(stacked, nb, *, mode, block_m, interpret):
+    N, M = stacked.shape
+    block_m = min(block_m, M)
+    pad = (-M) % block_m
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Mp = M + pad
+
+    kernel = functools.partial(_robust_kernel, n_rows=N, mode=mode)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // block_m,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((N, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Mp,), stacked.dtype),
+        interpret=interpret,
+    )(nb, stacked)
+    return out[:M]

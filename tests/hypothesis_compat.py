@@ -10,7 +10,8 @@ With hypothesis installed (``pip install -e .[test]``) this is a plain
 re-export — shrinking, the example database and the full strategy
 vocabulary all work. Without it, a miniature implementation of the
 strategies this repo actually uses (``integers``, ``floats``, ``lists``,
-``sampled_from``) draws ``max_examples`` pseudo-random examples from a
+``sampled_from``, ``booleans``, ``tuples``, ``one_of``) draws
+``max_examples`` pseudo-random examples from a
 fixed per-test seed, so the property tests still execute deterministically
 and regressions fail loudly rather than silently skipping. Unsupported
 strategy names raise at collection time — add them to _FallbackStrategies
@@ -60,6 +61,25 @@ except ImportError:
                 n = int(rng.integers(min_size, max_size + 1))
                 return [elements.example(rng) for _ in range(n)]
             return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies))
+
+        @staticmethod
+        def one_of(*strategies):
+            # hypothesis also accepts a single iterable of strategies
+            if len(strategies) == 1 and not isinstance(strategies[0],
+                                                       _Strategy):
+                strategies = tuple(strategies[0])
+            seq = list(strategies)
+            return _Strategy(
+                lambda rng: seq[int(rng.integers(len(seq)))].example(rng))
 
         def __getattr__(self, name):
             raise AttributeError(

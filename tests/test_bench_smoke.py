@@ -1,10 +1,11 @@
 """Tier-1 gate for benchmarks/bench_round.py: the smoke mode runs a tiny
-instance of the engine, sweep, control-plane and threat-model benchmarks
-with loud internal assertions — a bench regression (engine crash,
-padding-waste regression, sweep/sequential divergence, host/batched
-control-plane selection mismatch, masked/per-client attack-application
-mismatch) fails here instead of rotting silently until the next manual
-bench run."""
+instance of the engine, sweep, control-plane, threat-model and
+defense-plane benchmarks with loud internal assertions — a bench
+regression (engine crash, padding-waste regression, sweep/sequential
+divergence, host/batched control-plane selection mismatch,
+masked/per-client attack-application mismatch, host/batched robust
+aggregation mismatch) fails here instead of rotting silently until the
+next manual bench run."""
 import os
 import subprocess
 import sys
@@ -37,3 +38,8 @@ def test_bench_round_smoke():
                for line in r.stdout.splitlines())
     assert any(line.startswith("attacks_sweep,") for line in
                r.stdout.splitlines())
+    # defense plane: host-vs-batched robust-aggregator rows for all four
+    # aggregators made it out (parity asserted inside the worker)
+    for agg in ("trimmed_mean", "median", "norm_clip", "krum"):
+        assert any(line.startswith(f"defense,{agg},") for line in
+                   r.stdout.splitlines()), agg

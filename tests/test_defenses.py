@@ -1,0 +1,367 @@
+"""Defense plane (core/defenses.py): host-vs-batched aggregator parity
+(bitwise decisions, pinned payloads), the defense x engine x control
+parity matrix, the validation detector's feature-noise rep-gap reversal
+(the DESIGN.md §8 hole this plane closes), defense property tests, and
+the run_sweep defenses axis."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.configs.base import FeelConfig
+from repro.core import attacks as atk
+from repro.core import control as ctl
+from repro.core import defenses as dfs
+from repro.core.reputation import ReputationTracker
+from repro.federated.simulation import run_experiment, run_sweep
+from repro.models.mlp import mlp_init
+
+KW = dict(n_train=1200, n_test=300, rounds=2)
+
+
+def _cfg():
+    return FeelConfig(n_ues=8, n_malicious=2, min_selected=3)
+
+
+def _flat(seed, n, m=257):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, m)).astype(np.float32)
+
+
+def _pad(flat, n_pad):
+    out = np.zeros((n_pad,) + flat.shape[1:], flat.dtype)
+    out[:flat.shape[0]] = flat
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------- #
+# Bitwise masked-vs-oracle aggregator regressions: decisions exact,
+# payloads bit-equal where the reduction order is pinned (trimmed mean /
+# median sequential accumulation, norm-clip elementwise), Krum selection
+# index-exact (f64 scores).
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,n_pad", [(5, 8), (9, 16), (16, 16)])
+def test_trimmed_mean_host_batched_bitwise(n, n_pad):
+    x = _flat(0, n)
+    tm = dfs.TrimmedMean(0.2)
+    host, hs = tm.aggregate_host(x)
+    bat, bs = tm.aggregate_batched(_pad(x, n_pad), n)
+    np.testing.assert_array_equal(host, np.asarray(bat))
+    assert hs.n_rejected == bs.n_rejected == 2 * tm.n_trim(n)
+
+
+@pytest.mark.parametrize("n,n_pad", [(5, 8), (6, 8), (9, 16)])
+def test_median_host_batched_bitwise(n, n_pad):
+    x = _flat(1, n)
+    md = dfs.Median()
+    host, _ = md.aggregate_host(x)
+    bat, _ = md.aggregate_batched(_pad(x, n_pad), n)
+    np.testing.assert_array_equal(host, np.asarray(bat))
+    # odd n: the exact middle row; even n: the two-rank midpoint
+    xs = np.sort(x, axis=0)
+    np.testing.assert_array_equal(
+        host, (xs[(n - 1) // 2] + xs[n // 2]) * np.float32(0.5))
+
+
+def test_normclip_host_batched_bitwise_and_stats():
+    n, n_pad = 6, 8
+    x = _flat(2, n)
+    g = _flat(3, 1)[0]
+    nc = dfs.NormClip(0.5)
+    ch, hs = nc.clip_host(x, g)
+    cb, bs = nc.clip_batched(_pad(x, n_pad), jnp.asarray(g), n)
+    np.testing.assert_array_equal(ch, np.asarray(cb)[:n])
+    assert hs.n_clipped == bs.n_clipped > 0
+
+
+def test_krum_selection_host_batched_equal():
+    n, n_pad, f = 10, 16, 3
+    x = _flat(4, n)
+    x[:f] += 25.0           # the Byzantine rows sit far out
+    kr = dfs.Krum(f=f)
+    sel_h = kr.select_host(x, n_byz=f)
+    sel_b = kr.select_batched(_pad(x, n_pad), n, n_byz=f)
+    np.testing.assert_array_equal(sel_h, sel_b)
+    assert not set(sel_h) & set(range(f))       # outliers rejected
+    assert sel_h.size == n - f                  # multi-Krum default m
+
+
+def test_krum_degrades_to_fedavg_when_cohort_too_small():
+    x = _flat(5, 4)
+    sel = dfs.Krum().select_host(x, n_byz=2)    # n - f - 2 = 0
+    np.testing.assert_array_equal(sel, np.arange(4))
+
+
+def test_aggregate_entry_points_match_engines_shapes():
+    """aggregate_host (compressed pytree list) == aggregate_stacked
+    (padded stacked pytree) for every aggregator — the exact layouts the
+    two engines feed them."""
+    n, n_pad, n_byz = 6, 8, 2
+    template = mlp_init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(template)
+    rng = np.random.default_rng(6)
+    rows = [jax.tree.unflatten(treedef, [
+        np.asarray(l) + rng.normal(size=l.shape).astype(np.float32)
+        * (3.0 if i < n_byz else 0.1) for l in leaves])
+        for i in range(n)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(
+        [jnp.asarray(x) for x in xs]), *rows)
+    stacked_p = jax.tree.map(
+        lambda l: jnp.concatenate(
+            [l, jnp.zeros((n_pad - n,) + l.shape[1:], l.dtype)]), stacked)
+    weights = np.zeros(n_pad)
+    weights[:n] = (rng.integers(1, 31, n) * 50).astype(float)
+    for agg in (dfs.TrimmedMean(0.2), dfs.Median(), dfs.NormClip(1.0),
+                dfs.Krum()):
+        h, hs = dfs.aggregate_host(agg, rows, weights[:n], template, n_byz)
+        b, bs = dfs.aggregate_stacked(agg, stacked_p, weights, template,
+                                      n, n_byz)
+        for x, y in zip(jax.tree.leaves(h), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=2e-6)
+        assert (hs.n_clipped, hs.n_rejected) == (bs.n_clipped,
+                                                 bs.n_rejected)
+
+
+# ---------------------------------------------------------------------- #
+# Tentpole acceptance: EVERY registered defense, batched == oracle under
+# both engines and both control planes.
+# ---------------------------------------------------------------------- #
+_REFS = {}
+
+
+def _reference(name):
+    if name not in _REFS:
+        _REFS[name] = run_experiment("dqs", scenario="noise_0.8",
+                                     cfg=_cfg(), seed=0, engine="loop",
+                                     control="host", defense=name, **KW)
+    return _REFS[name]
+
+
+@pytest.mark.parametrize("engine,control", [("vectorized", "batched"),
+                                            ("vectorized", "host"),
+                                            ("loop", "batched")])
+@pytest.mark.parametrize("name", sorted(dfs.DEFENSES))
+def test_defense_parity_matrix(name, engine, control):
+    """Batched defense plane == host oracle for every registered defense,
+    under both cohort engines and both control planes."""
+    ref = _reference(name)
+    got = run_experiment("dqs", scenario="noise_0.8", cfg=_cfg(), seed=0,
+                         engine=engine, control=control, defense=name,
+                         **KW)
+    np.testing.assert_allclose(got["acc"], ref["acc"], atol=1e-5)
+    np.testing.assert_allclose(got["rep_gap"], ref["rep_gap"], atol=1e-6)
+    assert got["malicious_selected"] == ref["malicious_selected"]
+    assert got["n_clipped"] == ref["n_clipped"]
+    assert got["n_rejected"] == ref["n_rejected"]
+    assert got["n_flagged"] == ref["n_flagged"]
+    np.testing.assert_allclose(got["det_precision"], ref["det_precision"],
+                               atol=1e-9)
+    np.testing.assert_allclose(got["det_recall"], ref["det_recall"],
+                               atol=1e-9)
+
+
+def test_defense_none_matches_pre_defense_baseline():
+    """The undefended path must be byte-compatible with not passing a
+    defense at all (the pre-PR behaviour)."""
+    a = run_experiment("dqs", scenario="flip_6to2", cfg=_cfg(), seed=0,
+                       **KW)
+    b = run_experiment("dqs", scenario="flip_6to2", cfg=_cfg(), seed=0,
+                       defense="none", **KW)
+    assert a["acc"] == b["acc"]
+    assert a["rep_gap"] == b["rep_gap"]
+
+
+# ---------------------------------------------------------------------- #
+# The sweep defenses axis: (scenario x defense) stacked == sequential,
+# shared partitions, tidy keys.
+# ---------------------------------------------------------------------- #
+def test_sweep_defense_axis_matches_sequential():
+    scns = ["noise_0.8", "flip_6to2"]
+    dfns = ["none", "trimmed_mean+validation"]
+    res = run_sweep(["dqs"], seeds=[0], scenarios=scns, defenses=dfns,
+                    cfg=_cfg(), **KW)
+    seq = run_sweep(["dqs"], seeds=[0], scenarios=scns, defenses=dfns,
+                    cfg=_cfg(), stack_runs=False, **KW)
+    assert len(res.runs) == 4
+    for a, b in zip(res.runs, seq.runs):
+        assert (a["scenario"], a["defense"]) == (b["scenario"],
+                                                 b["defense"])
+        np.testing.assert_allclose(a["acc"], b["acc"], atol=1e-7)
+        assert a["n_flagged"] == b["n_flagged"]
+        assert a["n_rejected"] == b["n_rejected"]
+    # every run equals its sequential run_experiment twin
+    for r in res.runs:
+        twin = run_experiment("dqs", scenario=r["scenario"], cfg=_cfg(),
+                              seed=0, defense=r["defense"], **KW)
+        np.testing.assert_allclose(r["acc"], twin["acc"], atol=1e-6)
+        assert r["n_flagged"] == twin["n_flagged"]
+    # defense key threads through rows/select; partitions shared across
+    # the defense axis (defenses never touch data)
+    assert {r["defense"] for r in res.rows} == set(dfns)
+    assert (res.select(scenario="noise_0.8", defense="none")[0]["malicious"]
+            == res.select(scenario="noise_0.8",
+                          defense="trimmed_mean+validation")[0]["malicious"])
+
+
+# ---------------------------------------------------------------------- #
+# Acceptance: the validation detector reverses the feature-noise rep gap
+# (DESIGN.md §8 -> §9) while leaving the benign baseline's accuracy alone.
+# ---------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_validation_detector_reverses_feature_noise_rep_gap():
+    cfg = FeelConfig(n_ues=10, n_malicious=3, min_selected=4)
+    kw = dict(n_train=8000, n_test=1600, rounds=8, cfg=cfg)
+    res = run_sweep(["dqs"], seeds=[1], scenarios=["noise_0.8"],
+                    defenses=["none", "validation"], **kw)
+    undefended = res.select(defense="none")[0]
+    defended = res.select(defense="validation")[0]
+    gap = lambda r: (r["final_reputation_honest"]
+                     - r["final_reputation_malicious"])
+    assert gap(undefended) < 0, \
+        "feature noise should defeat Eq. 1 undefended (DESIGN.md §8)"
+    assert gap(defended) > 0, \
+        "the validation detector should reverse the rep gap"
+    assert sum(defended["n_flagged"]) > 0
+    # detector recall: the flagged set does hit the malicious UEs
+    rec = [r for r in defended["det_recall"] if np.isfinite(r)]
+    assert rec and max(rec) > 0
+
+
+@pytest.mark.slow
+def test_validation_detector_benign_accuracy_within_noise():
+    cfg = FeelConfig(n_ues=10, n_malicious=3, min_selected=4)
+    kw = dict(n_train=8000, n_test=1600, rounds=8, cfg=cfg)
+    res = run_sweep(["dqs"], seeds=[1], scenarios=["none"],
+                    defenses=["none", "validation"], **kw)
+    acc_u = res.select(defense="none")[0]["acc"][-1]
+    acc_d = res.select(defense="validation")[0]["acc"][-1]
+    assert abs(acc_u - acc_d) < 0.05
+
+
+# ---------------------------------------------------------------------- #
+# Detector internals + Eq. 1 penalty plumbing.
+# ---------------------------------------------------------------------- #
+def test_detector_anomaly_and_stats():
+    det = dfs.ValidationDetector(tol=0.1, weight=5.0)
+    acc_val = np.array([[0.9, 0.4, 0.85, 0.2],     # uploads
+                        [0.8, 0.8, 0.80, 0.8]])    # global baseline
+    a = det.anomaly(acc_val)
+    np.testing.assert_allclose(a, [0.0, 0.3, 0.0, 0.5], atol=1e-12)
+    prec, rec = dfs.detection_stats(a > 0, [False, True, False, False])
+    assert prec == 0.5 and rec == 1.0
+    prec, rec = dfs.detection_stats([False] * 4, [False] * 4)
+    assert np.isnan(prec) and np.isnan(rec)
+
+
+@pytest.mark.parametrize("kernel", ["hybrid", "jax"])
+def test_finalize_penalty_matches_tracker(kernel):
+    """finalize_runs(penalties=...) == ReputationTracker.update(penalty=)
+    per run, on both control-plane kernel layouts."""
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    R, K = 3, cfg.n_ues
+    reps = rng.uniform(0.2, 1.0, (R, K))
+    state = ctl.ControlState(
+        policy_id=np.zeros(R, np.int32), sizes=np.ones((R, K)),
+        divs=np.zeros((R, K)), r_min=np.ones((R, K)),
+        reputations=reps.copy(), ages=np.ones((R, K)), cfg=cfg)
+    sels = [np.sort(rng.choice(K, 4, replace=False)) for _ in range(R)]
+    als = [rng.uniform(0, 1, 4) for _ in range(R)]
+    ats = [rng.uniform(0, 1, 4) for _ in range(R)]
+    pens = [rng.uniform(0, 0.5, 4), None, np.zeros(4)]
+    ctl.finalize_runs(state, sels, als, ats, penalties=pens,
+                      kernel=kernel)
+    for i in range(R):
+        rt = ReputationTracker(cfg)
+        rt.values = reps[i].copy()
+        rt.update(sels[i], als[i], ats[i], penalty=pens[i])
+        np.testing.assert_allclose(state.reputations[i], rt.values,
+                                   atol=0 if kernel == "hybrid" else 1e-12)
+
+
+# ---------------------------------------------------------------------- #
+# Property tests (hypothesis_compat — exercises the new st.booleans /
+# st.tuples / st.one_of fallback strategies).
+# ---------------------------------------------------------------------- #
+@given(st.tuples(st.integers(3, 24), st.integers(0, 1000)),
+       st.floats(0.05, 0.45))
+@settings(max_examples=15, deadline=None)
+def test_trimmed_mean_within_coordinate_bounds(nn_seed, trim):
+    """Coordinate-wise trimmed mean lies within [min, max] of the
+    uploads, per coordinate."""
+    n, seed = nn_seed
+    x = _flat(seed, n, 64)
+    agg, _ = dfs.TrimmedMean(trim).aggregate_host(x)
+    assert (agg >= x.min(axis=0) - 1e-7).all()
+    assert (agg <= x.max(axis=0) + 1e-7).all()
+
+
+@given(st.integers(2, 16), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_median_permutation_invariant(n, seed):
+    x = _flat(seed, n, 64)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    a, _ = dfs.Median().aggregate_host(x)
+    b, _ = dfs.Median().aggregate_host(x[perm])
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(0, 1000), st.floats(0.2, 3.0), st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_norm_clip_idempotent_and_bounded(seed, tau, batched):
+    """Clipping is idempotent (a clipped cohort re-clips to itself) and
+    every clipped update norm is <= tau (up to float32 rounding)."""
+    n = 6
+    x = _flat(seed, n, 128)
+    g = _flat(seed + 1, 1, 128)[0]
+    nc = dfs.NormClip(tau)
+    if batched:
+        once, _ = nc.clip_batched(jnp.asarray(x), jnp.asarray(g), n)
+        twice, _ = nc.clip_batched(once, jnp.asarray(g), n)
+        once, twice = np.asarray(once), np.asarray(twice)
+    else:
+        once, _ = nc.clip_host(x, g)
+        twice, _ = nc.clip_host(once, g)
+    np.testing.assert_allclose(twice, once, atol=1e-6)
+    norms = np.linalg.norm((once - g[None]).astype(np.float64), axis=1)
+    assert (norms <= tau * (1 + 1e-5)).all()
+
+
+@given(st.tuples(st.integers(8, 20), st.integers(0, 1000)),
+       st.one_of(st.sampled_from([1]), st.sampled_from([2, 3])))
+@settings(max_examples=15, deadline=None)
+def test_krum_selects_honest_update(nn_seed, f):
+    """With f malicious outliers, f < n/2 - 1, honest updates clustered:
+    single-Krum's pick is honest and multi-Krum rejects every outlier."""
+    n, seed = nn_seed
+    f = min(f, max((n - 1) // 2 - 1, 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=0.1, size=(n, 96)).astype(np.float32)
+    x[:f] += 50.0
+    pick = dfs.Krum(n_select=1, f=f).select_host(x, n_byz=f)
+    assert pick.size == 1 and pick[0] >= f
+    multi = dfs.Krum(f=f).select_host(x, n_byz=f)
+    assert not set(multi) & set(range(f))
+
+
+# ---------------------------------------------------------------------- #
+# Registry / coercion.
+# ---------------------------------------------------------------------- #
+def test_registry_and_coercion():
+    assert dfs.as_defense(None) is dfs.NO_DEFENSE
+    assert dfs.as_defense("median").aggregator == dfs.Median()
+    d = dfs.with_validation(dfs.trimmed_mean(0.2))
+    assert d.name == "trimmed_mean+validation"
+    assert d.aggregator == dfs.TrimmedMean(0.2)
+    assert d.detector is not None
+    with pytest.raises(KeyError):
+        dfs.as_defense("nope")
+    with pytest.raises(TypeError):
+        dfs.as_defense(3.14)
+    assert {"none", "trimmed_mean", "median", "norm_clip", "krum",
+            "validation",
+            "trimmed_mean+validation"} <= set(dfs.DEFENSES)

@@ -99,3 +99,35 @@ def test_sweep_loop_engine_falls_back():
     ref = run_experiment("dqs", EASY_PAIR, seed=0, engine="loop",
                          n_train=3000, n_test=200, rounds=2)
     np.testing.assert_allclose(res.runs[0]["acc"], ref["acc"], atol=1e-7)
+
+
+def test_mean_curve_nan_aware_watch_metrics():
+    """Regression (defense-plane PR): NaN watch-metric rows — a watch-less
+    scenario's attack_success, undefined det_precision — must not poison
+    cross-run means, and all-NaN slices stay NaN without numpy's all-NaN
+    RuntimeWarning."""
+    import warnings
+    res = run_sweep(["dqs"], seeds=[0], scenarios=["none", "flip_6to2"],
+                    n_train=1200, n_test=300, rounds=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # any RuntimeWarning fails
+        # "none" has no watched pair -> attack_success all NaN
+        none_curve = res.mean_curve("attack_success", scenario="none")
+        assert np.isnan(none_curve).all()
+        # mixing the NaN run with the watched run keeps the finite values
+        mixed = res.mean_curve("attack_success")
+        flip = res.mean_curve("attack_success", scenario="flip_6to2")
+        np.testing.assert_allclose(mixed, flip)
+        assert np.isfinite(mixed).all()
+        # the bundle API rides the same reduction
+        out = res.averaged(scenario="none")
+        assert np.isfinite(out["acc"]).all()
+        assert np.isnan(out["attack_success"]).all()
+
+
+def test_sweep_rows_carry_defense_fields(sweep):
+    r0 = sweep.rows[0]
+    for field in ("defense", "n_clipped", "n_rejected", "n_flagged",
+                  "det_precision", "det_recall"):
+        assert field in r0, field
+    assert r0["defense"] == "none"
