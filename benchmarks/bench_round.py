@@ -8,6 +8,7 @@ cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
     PYTHONPATH=src python -m benchmarks.bench_round --control \
         --ks 50 500 2000                        # host vs batched control plane
     PYTHONPATH=src python -m benchmarks.bench_round --attacks      # threat plane
+    PYTHONPATH=src python -m benchmarks.bench_round --llm          # LM task plane
     PYTHONPATH=src python -m benchmarks.bench_round --smoke        # CI gate
 
 Methodology — each (engine, K) measurement runs the §V unit of work in a
@@ -50,6 +51,13 @@ matrix, host compressed-numpy oracle vs the batched jnp twin, swept over
 K and over n_malicious at K=64 (host/batched parity asserted per cell;
 the batched path must be flat in n_malicious) — written to
 ``results/BENCH_defenses.json``.
+
+``--llm`` measures the LM task plane: per-round cost of federated
+``lm_tiny`` fine-tuning, loop vs vectorized cohort engine at K in {8, 16},
+each engine with and without ``REPRO_USE_PALLAS=1`` (flash-attention
+training forwards; interpret mode on CPU — path-exercise rows, not perf
+claims). Loop/vectorized held-out loss is asserted bit-equal per cell —
+written to ``results/BENCH_llm.json``.
 
 ``--smoke`` runs a tiny instance of every benchmark with loud assertions
 (bucketed padding waste must not exceed the single-pad waste; curves must
@@ -420,13 +428,14 @@ ENGINE_DEFAULTS = {"ks": [50, 200, 500], "rounds": 3, "seeds": 3,
                    "engines": ["loop", "vectorized"], "buckets": 3}
 
 
-def _run_worker(code, argv, timeout=3600):
+def _run_worker(code, argv, timeout=3600, extra_env=None):
     r = subprocess.run(
         [sys.executable, "-c", code] + [str(a) for a in argv],
         capture_output=True, text=True,
         env={**os.environ,
              "PYTHONPATH": SRC + os.pathsep + os.environ.get("PYTHONPATH",
-                                                             "")},
+                                                             ""),
+             **(extra_env or {})},
         timeout=timeout)
     assert r.returncode == 0, r.stderr[-2000:]
     return json.loads(r.stdout.strip().splitlines()[-1])
@@ -616,6 +625,79 @@ def bench_defenses(ks=DEFENSE_KS, n_mals=DEFENSE_NMALS, reps=10,
     return rows
 
 
+_LLM_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.configs.base import FeelConfig
+from repro.core.attacks import as_scenario
+from repro.core.poisoning import pick_malicious
+from repro.federated.server import FeelServer
+from repro.federated.task import as_task
+
+engine, k, n_train, n_test, rounds = (
+    sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]))
+task = as_task("lm_tiny")
+cfg = FeelConfig(n_ues=k, n_malicious=max(k // 4, 1), task="lm_tiny")
+scn = as_scenario("token_flip_1to5")
+train, test = task.generate_data(n_train, n_test, 0)
+rng = np.random.default_rng(0)
+malicious = pick_malicious(k, cfg.n_malicious, rng)
+clients = task.partition_clients(train, k, rng, malicious, scn.data)
+server = FeelServer(cfg, clients, test, rng, policy="dqs", engine=engine,
+                    scenario=scn)
+times, losses = [], []
+for t in range(rounds):
+    t0 = time.perf_counter()
+    log = server.run_round(t)
+    times.append(time.perf_counter() - t0)
+    losses.append(log.global_loss)
+assert all(np.isfinite(l) for l in losses), losses
+print(json.dumps({"times": times, "loss": losses}))
+"""
+
+LLM_KS = (8, 16)          # the tracked BENCH_llm.json K grid
+LLM_DEFAULTS = (LLM_KS, 2)
+
+
+def bench_llm(ks=LLM_KS, rounds=2, flash=True, write_json=True):
+    """LM-task plane: per-round cost of federated lm_tiny fine-tuning,
+    loop vs vectorized cohort engine at each K, each engine also under
+    ``REPRO_USE_PALLAS=1`` (training forwards through the Pallas flash
+    kernel). Loop/vectorized loss parity is asserted bitwise per (K,
+    flash) cell — the LM engine-parity contract of tests/test_task_lm.py
+    at bench scale. On CPU the flash rows run the kernel in interpret
+    mode (~50x XLA), so they are path-exercise measurements, not perf
+    claims, and run a single round."""
+    print("llm,engine,K,flash,n_train,s_per_round,loss_r0")
+    rows = []
+    for k in ks:
+        n_train, n_test = k * 60, 120
+        for use_flash in ((False, True) if flash else (False,)):
+            env = {"REPRO_USE_PALLAS": "1"} if use_flash else None
+            r = 1 if use_flash else rounds
+            out = {eng: _run_worker(_LLM_WORKER,
+                                    [eng, k, n_train, n_test, r],
+                                    extra_env=env)
+                   for eng in ("loop", "vectorized")}
+            assert np.array_equal(out["loop"]["loss"],
+                                  out["vectorized"]["loss"]), \
+                f"LM engine loss divergence at K={k} flash={use_flash}"
+            for eng in ("loop", "vectorized"):
+                mean = sum(out[eng]["times"]) / len(out[eng]["times"])
+                rows.append({"engine": eng, "K": k, "flash": use_flash,
+                             "n_train": n_train,
+                             "s_per_round": round(mean, 3),
+                             "loss_r0": round(out[eng]["loss"][0], 6)})
+                print(f"llm,{eng},{k},{int(use_flash)},{n_train},"
+                      f"{mean:.3f},{out[eng]['loss'][0]:.4f}", flush=True)
+    if write_json:
+        write_bench_json(
+            "llm", {"bench": "lm_task_per_round", "rows": rows},
+            canonical=(tuple(ks), rounds) == LLM_DEFAULTS and flash)
+    return rows
+
+
 def smoke():
     """Tiny end-to-end run of both benchmarks with loud assertions.
 
@@ -646,6 +728,12 @@ def smoke():
     # 4 aggregators x the {requested 2, default k//8=1} n_malicious grid
     assert len(def_rows) == 8 and all(r["batched_ms"] > 0
                                       for r in def_rows)
+    # LM task plane: the in-bench assertion (loop == vectorized loss,
+    # bitwise) is the gate; flash rows stay out of smoke — the CPU
+    # interpret-mode kernel is ~50x XLA and belongs to the manual --llm run
+    llm_rows = bench_llm(ks=[4], rounds=1, flash=False, write_json=False)
+    assert len(llm_rows) == 2 and all(r["s_per_round"] > 0
+                                      for r in llm_rows)
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
           f"control speedup {ctl_rows[0]['speedup']:.2f}x, "
@@ -694,12 +782,19 @@ def main():
                     help="benchmark the defense plane: robust aggregators "
                          "host vs batched, vs K and vs n_malicious at "
                          "K=64; writes results/BENCH_defenses.json")
+    ap.add_argument("--llm", action="store_true",
+                    help="benchmark the LM task plane: lm_tiny per-round "
+                         "cost, loop vs vectorized engine, flash on/off; "
+                         "writes results/BENCH_llm.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny asserted run of every benchmark (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.llm:
+        bench_llm()
         return
     if args.defenses:
         bench_defenses()

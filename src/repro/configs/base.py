@@ -290,6 +290,12 @@ class FeelConfig:
     # pin a defended baseline; sweeps vary defenses per run via
     # ``run_sweep(defenses=[...])`` while sharing one config
     defense: str = "none"
+    # default task (federated/task.py registry name): the model/data pair
+    # the federated round trains — "mnist_mlp" (the paper's §V protocol)
+    # or "lm_tiny" (federated LM fine-tuning). Sweeps vary tasks per run
+    # via ``run_sweep(tasks=[...])``; the batched control plane treats
+    # configs differing only in ``task`` as compatible (core/control.py).
+    task: str = "mnist_mlp"
     # client compute model (Eq. 6). zeta/f are unspecified in the paper;
     # calibrated so t_train spans [~1s, ~375s] against T=300s — large datasets
     # on slow UEs can blow the deadline, which is exactly the paper's

@@ -10,10 +10,11 @@ The seed hard-coded ONE of them: a full label flip on a single
 flag. This module turns the threat model into a first-class axis:
 
     AttackScenario — a named bundle of four orthogonal components:
-        data     DataAttack        poisons a malicious UE's raw ``(x, y)``
-                                   at partition time (label flips with
-                                   pair x fraction x multi-pair, feature
-                                   noise)
+        data     DataAttack        poisons a malicious UE's raw data at
+                                   partition time (label flips with pair x
+                                   fraction x multi-pair, feature noise;
+                                   token-space twins TokenFlip/TokenNoise
+                                   for the LM task)
         model    ModelAttack       manipulates the *uploaded update*
                                    (sign-flip, boosted, free-rider,
                                    stale replay)
@@ -171,7 +172,82 @@ class FeatureNoise:
         return jnp.where(m, noisy, x), jnp.asarray(y)
 
 
-DataAttack = Union[LabelFlip, FeatureNoise]
+@dataclasses.dataclass(frozen=True)
+class TokenFlip:
+    """Token substitution — the label-flip analogue for LM token streams
+    (task="lm_tiny"): every occurrence of a source TOKEN in a malicious
+    UE's windows is rewritten to the target token, corrupting the bigram
+    statistics the model has to learn. ``flip_fraction < 1`` substitutes
+    exactly ``round(fraction * n_source)`` occurrences — the ones with the
+    smallest uniform draws (stable ranking), mirroring ``LabelFlip``'s
+    selection rule at token granularity. Pairs resolve against the
+    ORIGINAL tokens, so chained pairs never cascade."""
+    pairs: Tuple[Pair, ...]
+    flip_fraction: float = 1.0
+
+    def __post_init__(self):
+        pairs = tuple((int(s), int(t)) for s, t in self.pairs)
+        object.__setattr__(self, "pairs", pairs)
+        sources = [s for s, _ in pairs]
+        assert len(set(sources)) == len(sources), \
+            f"duplicate source tokens in {pairs}"
+        assert 0.0 < self.flip_fraction <= 1.0, self.flip_fraction
+
+    def poison_tokens(self, tokens: np.ndarray,
+                      rng: np.random.Generator) -> np.ndarray:
+        """tokens (N, seq) int -> substituted copy (same shape/dtype)."""
+        flat = tokens.reshape(-1)
+        u = (rng.random(flat.size, dtype=np.float32)
+             if self.flip_fraction < 1.0 else None)
+        out = flat.copy()
+        for s, t in self.pairs:
+            src = np.flatnonzero(flat == s)          # original tokens
+            if u is not None:
+                n = int(np.round(self.flip_fraction * float(src.size)))
+                if n < src.size:
+                    order = np.argsort(u[src], kind="stable")
+                    src = src[order[:n]]
+            out[src] = t
+        return out.reshape(tokens.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenNoise:
+    """Unreliable-text scenario: each token of a malicious/faulty UE's
+    windows is independently resampled uniformly over the vocabulary with
+    probability ``rate`` — the LM twin of ``FeatureNoise`` (labels, i.e.
+    window domain ids, untouched)."""
+    rate: float = 0.3
+    vocab: int = 64
+
+    def poison_tokens(self, tokens: np.ndarray,
+                      rng: np.random.Generator) -> np.ndarray:
+        u = rng.random(tokens.shape, dtype=np.float32)
+        repl = rng.integers(0, self.vocab,
+                            size=tokens.shape).astype(tokens.dtype)
+        return np.where(u < np.float32(self.rate), repl, tokens)
+
+
+DataAttack = Union[LabelFlip, FeatureNoise, TokenFlip, TokenNoise]
+
+
+def poison_dataset(attack, ds, rng: np.random.Generator):
+    """Dataset-dispatching poison entry point (used by
+    ``data.partition.partition``): token-space attacks rewrite a
+    ``TokenDataset``'s windows, feature/label attacks rewrite a
+    ``Dataset``'s ``(x, y)`` — a mismatched (attack, dataset) pairing
+    fails loudly instead of silently no-opping."""
+    if hasattr(attack, "poison_tokens"):
+        assert hasattr(ds, "tokens"), (
+            f"{type(attack).__name__} is a token-space attack and needs a "
+            f"token dataset, got {type(ds).__name__} (use LabelFlip/"
+            "FeatureNoise for feature/label data)")
+        return type(ds)(attack.poison_tokens(ds.tokens, rng), ds.y.copy())
+    assert hasattr(ds, "x"), (
+        f"{type(attack).__name__} poisons (x, y) arrays and needs a "
+        f"feature dataset, got {type(ds).__name__} (use TokenFlip/"
+        "TokenNoise for token data)")
+    return type(ds)(*attack.poison(ds.x, ds.y, rng))
 
 
 # ---------------------------------------------------------------------- #
@@ -242,8 +318,13 @@ class MaliciousSchedule:
                    period-th round it is scheduled — the collusion
                    pattern that slows Eq. 1's separation the most.
 
-    Applies to model/report attacks only: data attacks are baked into the
-    partition and cannot vary per round (AttackScenario enforces this).
+    Applies to every component: model/report attacks are gated directly
+    per round, and data attacks — poisoned once at partition time — are
+    gated through the clean+poisoned twin-array gather (the server keeps
+    both copies of an attacked client's data resident and selects per
+    round; ``FeelServer._cohort_parts`` / the loop oracle's clean-data
+    fallback), so intermittent/colluding data poisoning no longer needs a
+    per-round re-partition.
     """
     kind: str = "always"      # always | intermittent | roundrobin
     period: int = 1
@@ -295,13 +376,8 @@ class AttackScenario:
     watch: Optional[Pair] = None
 
     def __post_init__(self):
-        if self.data is not None and self.schedule.kind != "always":
-            raise ValueError(
-                "data attacks are applied once at partition time and "
-                "cannot follow a round-dependent schedule "
-                f"(scenario {self.name!r}); schedule model/report "
-                "components instead")
-        if self.watch is None and isinstance(self.data, LabelFlip):
+        if self.watch is None and isinstance(self.data,
+                                             (LabelFlip, TokenFlip)):
             object.__setattr__(self, "watch", self.data.pairs[0])
 
     @property
@@ -357,6 +433,26 @@ def feature_noise(sigma: float = 0.8,
                           data=FeatureNoise(sigma))
 
 
+def token_flip(source: int, target: int, flip_fraction: float = 1.0,
+               name: Optional[str] = None) -> AttackScenario:
+    """LM data attack (task="lm_tiny"): substitute the source TOKEN with
+    the target token in malicious UEs' windows (watch pair = the token
+    pair, so attack_success reads "fraction of watched source-token
+    positions predicted as the target token")."""
+    if name is None:
+        name = f"token_flip_{source}to{target}"
+        if flip_fraction < 1.0:
+            name += f"_f{int(round(flip_fraction * 100))}"
+    return AttackScenario(name, data=TokenFlip(((source, target),),
+                                               flip_fraction))
+
+
+def token_noise(rate: float = 0.3, vocab: int = 64,
+                name: Optional[str] = None) -> AttackScenario:
+    return AttackScenario(name or f"token_noise_{rate:g}",
+                          data=TokenNoise(rate, vocab))
+
+
 def free_rider(staleness: int = 0,
                name: Optional[str] = None) -> AttackScenario:
     name = name or ("free_rider" if staleness == 0
@@ -405,6 +501,10 @@ register(lie_boost(0.3, data=LabelFlip(((8, 4),)),
                    name="lying_flip_8to4"))
 register(intermittent(model_poison(-1.0), period=2))
 register(colluding(model_poison(-1.0), period=2))
+register(token_flip(1, 5))                              # LM data attack
+register(token_noise(0.3))
+register(intermittent(label_flip(6, 2), period=2,
+                      name="flip_6to2_int2"))           # twin-array gather
 
 
 def as_scenario(spec) -> AttackScenario:

@@ -96,8 +96,13 @@ class ControlState:
     @classmethod
     def from_servers(cls, servers: Sequence) -> "ControlState":
         cfg = servers[0].cfg
-        assert all(s.cfg == cfg for s in servers), \
-            "batched control requires one shared FeelConfig across runs"
+        # the control plane never touches the data/model plane, so configs
+        # differing ONLY in ``task`` are compatible — a mixed-task sweep
+        # (run_sweep(tasks=[...])) schedules every run through one kernel
+        assert all(dataclasses.replace(s.cfg, task=cfg.task) == cfg
+                   for s in servers), \
+            "batched control requires one shared FeelConfig across runs " \
+            "(modulo the task field)"
         r_min = np.stack([
             s.wireless.min_rate(s.wireless.train_time(s.sizes, s.cpu_hz))
             for s in servers])

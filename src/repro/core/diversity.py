@@ -27,6 +27,18 @@ def gini_simpson(labels: np.ndarray, n_classes: int) -> float:
     return float(1.0 - np.sum(p * p))
 
 
+def gini_simpson_hist(counts: np.ndarray) -> float:
+    """``gini_simpson`` from a precomputed histogram — the form tasks whose
+    symbols are not per-sample labels use (e.g. token histograms of an LM
+    client's windows, federated/task.py). 0.0 for an empty histogram."""
+    counts = np.asarray(counts, float)
+    total = counts.sum()
+    if total == 0:
+        return 0.0
+    p = counts / total
+    return float(1.0 - np.sum(p * p))
+
+
 def normalize_rows(values: np.ndarray) -> np.ndarray:
     """Min-max normalise a metric to [0, 1] along the last (UE) axis, any
     leading (run) batch axes — the ONE numpy definition of the Eq. 2

@@ -1,8 +1,9 @@
 from repro.data.partition import (ClientData, GROUP_SIZE, label_histogram,
-                                  partition)
+                                  pad_clients, partition)
 from repro.data.synthetic_mnist import Dataset, N_CLASSES, generate
-from repro.data.tokens import batches, make_stream, zipf_probs
+from repro.data.tokens import (TokenDataset, batches, make_stream,
+                               make_windows, zipf_probs)
 
-__all__ = ["ClientData", "GROUP_SIZE", "label_histogram", "partition",
-           "Dataset", "N_CLASSES", "generate", "batches", "make_stream",
-           "zipf_probs"]
+__all__ = ["ClientData", "GROUP_SIZE", "label_histogram", "pad_clients",
+           "partition", "Dataset", "N_CLASSES", "generate", "TokenDataset",
+           "batches", "make_stream", "make_windows", "zipf_probs"]

@@ -1,19 +1,26 @@
 """Non-IID federated partition (paper §V-A "Data distribution").
 
-Sort the training data by label, form groups of 50 same-digit images, then
-allocate uniformly between 1 and 30 groups to each of the K UEs (the paper
-states 1200 groups; with 50,000 training samples the scheme yields
-len(train)//50 groups — the allocation protocol is identical). Groups are
-drawn without replacement, so datasets are unbalanced AND class-skewed.
+Sort the training data by label, form groups of ``group_size`` same-label
+samples, then allocate uniformly between ``min_groups`` and ``max_groups``
+groups to each of the K UEs (the paper states 1200 groups of 50 MNIST
+images; with 50,000 training samples the scheme yields len(train)//50
+groups — the allocation protocol is identical). Groups are drawn without
+replacement, so datasets are unbalanced AND class-skewed.
+
+The partition is task-generic: any dataset exposing ``__len__``,
+``subset(idx)`` and a ``(N,)`` label array ``y`` works — synthetic-MNIST
+``Dataset`` (y = digit class) and the LM task's ``TokenDataset`` (y =
+domain id) both do. Padding (``pad_clients`` / ``pad_clients_bucketed``)
+is pytree-generic over the per-sample arrays (``sample_arrays``): MNIST
+pads ``(S, 784)/(S,)`` feature/label arrays, the LM task pads ``(S, seq)``
+int32 token windows, under one shared ``(K, S)`` validity-mask contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
-
-from repro.data.synthetic_mnist import Dataset
 
 GROUP_SIZE = 50
 MIN_GROUPS = 1
@@ -22,31 +29,45 @@ MAX_GROUPS = 30
 
 @dataclasses.dataclass
 class ClientData:
+    """One UE's local dataset.
+
+    ``clean`` keeps the pre-poison twin when a data attack rewrote
+    ``data`` at partition time (None for honest UEs / benign scenarios):
+    round-scheduled (intermittent/colluding) data attacks gather the clean
+    rows in the UE's off rounds instead of re-partitioning — see
+    ``federated.server.CohortData``.
+    """
     ue_id: int
-    data: Dataset
+    data: object              # Dataset / TokenDataset (duck-typed)
     malicious: bool = False
+    clean: Optional[object] = None
 
     @property
     def size(self) -> int:
         return len(self.data)
 
 
-def partition(train: Dataset, n_ues: int, rng: np.random.Generator,
+def partition(train, n_ues: int, rng: np.random.Generator,
               malicious: Optional[np.ndarray] = None,
-              attack=None) -> List[ClientData]:
+              attack=None, group_size: int = GROUP_SIZE,
+              min_groups: int = MIN_GROUPS,
+              max_groups: int = MAX_GROUPS) -> List[ClientData]:
     """Allocate label-sorted sample groups to K UEs (module docstring).
 
     ``attack`` poisons each malicious UE's raw data: either a
-    ``core.attacks`` data attack (``poison(x, y, rng) -> (x, y)`` — label
-    flips with pair x fraction x multi-pair, feature noise) or the legacy
-    label-only ``core.poisoning.LabelFlipAttack`` (``apply(y, rng)``).
+    ``core.attacks`` data attack (dispatched on the dataset type by
+    ``attacks.poison_dataset`` — label flips / feature noise for
+    ``Dataset``, token substitution / token noise for ``TokenDataset``)
+    or the legacy label-only ``core.poisoning.LabelFlipAttack``
+    (``apply(y, rng)``). The clean twin of a poisoned dataset is kept on
+    ``ClientData.clean`` for round-scheduled data attacks.
     """
     order = np.argsort(train.y, kind="stable")
-    n_groups = len(train) // GROUP_SIZE
-    groups = order[: n_groups * GROUP_SIZE].reshape(n_groups, GROUP_SIZE)
+    n_groups = len(train) // group_size
+    groups = order[: n_groups * group_size].reshape(n_groups, group_size)
 
     perm = rng.permutation(n_groups)
-    counts = rng.integers(MIN_GROUPS, MAX_GROUPS + 1, size=n_ues)
+    counts = rng.integers(min_groups, max_groups + 1, size=n_ues)
     # truncate if the draw exceeds the pool (keeps the protocol well-defined)
     while counts.sum() > n_groups:
         counts[np.argmax(counts)] -= 1
@@ -59,17 +80,30 @@ def partition(train: Dataset, n_ues: int, rng: np.random.Generator,
         idx = groups[take].reshape(-1)
         ds = train.subset(idx)
         is_mal = k in mal
+        clean = None
         if is_mal and attack is not None:
-            if hasattr(attack, "poison"):       # core.attacks DataAttack
-                ds = Dataset(*attack.poison(ds.x, ds.y, rng))
+            clean = ds
+            if hasattr(attack, "poison") or hasattr(attack, "poison_tokens"):
+                from repro.core.attacks import poison_dataset
+                ds = poison_dataset(attack, ds, rng)
             else:                               # legacy label-only attack
-                ds = Dataset(ds.x, attack.apply(ds.y, rng))
-        clients.append(ClientData(ue_id=k, data=ds, malicious=is_mal))
+                ds = type(ds)(ds.x, attack.apply(ds.y, rng))
+        clients.append(ClientData(ue_id=k, data=ds, malicious=is_mal,
+                                  clean=clean))
     return clients
 
 
-def label_histogram(ds: Dataset, n_classes: int = 10) -> np.ndarray:
+def label_histogram(ds, n_classes: int = 10) -> np.ndarray:
     return np.bincount(ds.y.astype(int), minlength=n_classes)
+
+
+def sample_arrays(data) -> Dict[str, np.ndarray]:
+    """Per-sample array pytree of a dataset — the fields the padded cohort
+    layout stacks. Token datasets carry one ``(N, seq)`` int window array;
+    feature datasets the classic ``(N, D)/(N,)`` (x, y) pair."""
+    if hasattr(data, "tokens"):
+        return {"tokens": data.tokens}
+    return {"x": data.x, "y": data.y}
 
 
 @dataclasses.dataclass
@@ -78,20 +112,30 @@ class PaddedClients:
 
     Every client dataset is zero-padded on the sample axis to one shared
     ``max_samples`` length with a {0,1} float validity mask; real samples
-    occupy the prefix. Padding rows are all-zero features with label 0 and
-    mask 0 — the masked SGD in ``models/mlp.py`` guarantees they contribute
-    exactly zero gradient, so training on the padded layout reproduces the
-    per-client unpadded run. A round's cohort is stacked by plain row
-    indexing: ``padded.x[sel]`` is the (N, max_samples, D) batch.
+    occupy the prefix. ``arrays`` holds the per-sample field pytree
+    (``sample_arrays``), each leaf ``(K, max_samples, ...)``; padding rows
+    are all-zero with mask 0 — the task's masked SGD guarantees they
+    contribute exactly zero gradient, so training on the padded layout
+    reproduces the per-client unpadded run. A round's cohort is stacked by
+    plain row indexing: ``padded.x[sel]`` is the (N, max_samples, D) batch.
+
+    ``x``/``y`` remain as properties for the classic feature layout.
     """
-    x: np.ndarray       # (K, max_samples, D) float32
-    y: np.ndarray       # (K, max_samples) int32
-    mask: np.ndarray    # (K, max_samples) float32, 1 = real sample
-    sizes: np.ndarray   # (K,) true sample counts
+    arrays: Dict[str, np.ndarray]   # each (K, max_samples, ...)
+    mask: np.ndarray                # (K, max_samples) float32, 1 = real
+    sizes: np.ndarray               # (K,) true sample counts
+
+    @property
+    def x(self) -> np.ndarray:
+        return self.arrays["x"]
+
+    @property
+    def y(self) -> np.ndarray:
+        return self.arrays["y"]
 
     @property
     def max_samples(self) -> int:
-        return self.x.shape[1]
+        return self.mask.shape[1]
 
 
 def bucket_levels(max_size: int, n_buckets: int,
@@ -164,14 +208,14 @@ def pad_clients(clients: List[ClientData], multiple_of: int = 1,
         assert pad_to >= s_max, (pad_to, s_max)
         s_max = pad_to
     s_max = ((s_max + multiple_of - 1) // multiple_of) * multiple_of
-    n_feat = clients[0].data.x.shape[1]
     k = len(clients)
-    x = np.zeros((k, s_max, n_feat), np.float32)
-    y = np.zeros((k, s_max), np.int32)
+    fields = sample_arrays(clients[0].data)
+    arrays = {f: np.zeros((k, s_max) + a.shape[1:], a.dtype)
+              for f, a in fields.items()}
     mask = np.zeros((k, s_max), np.float32)
     for i, c in enumerate(clients):
         n = c.size
-        x[i, :n] = c.data.x
-        y[i, :n] = c.data.y
+        for f, a in sample_arrays(c.data).items():
+            arrays[f][i, :n] = a
         mask[i, :n] = 1.0
-    return PaddedClients(x=x, y=y, mask=mask, sizes=sizes)
+    return PaddedClients(arrays=arrays, mask=mask, sizes=sizes)

@@ -6,8 +6,10 @@ from repro.federated.server import (CohortData, FeelServer, RoundLog,
                                     build_cohort_data)
 from repro.federated.simulation import (SweepResult, averaged,
                                         run_experiment, run_sweep)
+from repro.federated.task import TASKS, FeelTask, LmTask, MnistTask, as_task
 
 __all__ = ["fedavg", "fedavg_stacked", "normalize_weights", "ClientReport",
            "local_train", "cohort_eval", "cohort_train", "CohortData",
            "FeelServer", "RoundLog", "build_cohort_data", "SweepResult",
-           "averaged", "run_experiment", "run_sweep"]
+           "averaged", "run_experiment", "run_sweep", "TASKS", "FeelTask",
+           "LmTask", "MnistTask", "as_task"]

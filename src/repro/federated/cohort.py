@@ -2,18 +2,31 @@
 
 The paper trains every scheduled UE independently per round; the seed
 implemented that as a sequential Python loop (`FeelServer.run_round` ->
-`local_train`) that re-traced `mlp_sgd_epoch` for every distinct client
-dataset size. Here the round's cohort is stacked into (N, max_samples, ...)
-arrays (see ``data.partition.pad_clients`` for the padding/masking
-contract) and all N local trainings run in ONE jitted, vmapped program:
+`local_train`) that re-traced the per-client epoch for every distinct
+client dataset size. Here the round's cohort is stacked into
+(N, max_samples, ...) arrays (see ``data.partition.pad_clients`` for the
+padding/masking contract) and all N local trainings run in ONE jitted,
+vmapped program:
 
-    cohort_train — vmap of (masked epochs + masked local accuracy) over the
+    cohort_train — vmap of (masked epochs + masked local metric) over the
         leading client axis; global params are broadcast in, per-client
         trained params come back stacked on axis 0, ready for
         ``fedavg_stacked`` / the Pallas ``weighted_aggregate`` kernel.
     cohort_eval  — one vmapped pass scoring every uploaded model on the
         (per-UE masked) public test set, replacing the server's per-model
         evaluation loop (Alg. 1 line 14).
+
+The engine is task-generic (federated/task.py): the per-sample arrays are
+a pytree ``data`` dict ({"x", "y"} feature/label arrays for the MNIST MLP,
+{"tokens"} int32 windows for the LM task) and the per-client train/metric
+steps are the TASK's jit-static methods — the vmap/scan/bucket machinery
+never mentions a concrete model. Tasks are frozen dataclasses, so passing
+them via ``static_argnames`` keys one compile cache entry per task.
+
+Evaluation is over the task's prediction UNITS (test samples for MNIST,
+next-token target positions for the LM): ``eval_inputs`` is the task's
+device-side test pytree, ``y_units``/``masks`` are (U,)/(N, U) unit-level
+labels and per-UE support masks.
 
 Shapes are cohort-size dependent, so each distinct (N, max_samples) pair
 compiles once and is cached for all later rounds; padding max_samples to a
@@ -37,34 +50,34 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.models.mlp import (mlp_accuracy_masked, mlp_apply,
-                              mlp_sgd_epoch_masked)
 
-
-@partial(jax.jit, static_argnames=("epochs", "batch_size"))
-def cohort_train(params, x, y, mask, lr, epochs: int, batch_size: int = 50):
+@partial(jax.jit, static_argnames=("task", "epochs", "batch_size"))
+def cohort_train(task, params, data, mask, lr, epochs: int,
+                 batch_size: int = 50):
     """Train the whole cohort in one vmapped step.
 
-    params — global model (broadcast to every client);
-    x (N, S, D), y (N, S), mask (N, S) — the padded, stacked cohort.
+    task — the jit-static FeelTask whose ``sgd_epoch``/``local_metric``
+    define the per-client step; params — global model (broadcast to every
+    client); data — per-sample array pytree with leaves (N, S, ...),
+    mask (N, S) — the padded, stacked cohort.
     Returns (stacked_params with leaves (N, ...), acc_local (N,)) where
-    acc_local is each client's self-reported accuracy on its own (valid)
+    acc_local is each client's self-reported metric on its own (valid)
     samples after local training (Alg. 1 line 11).
     """
-    def one(xi, yi, mi):
+    def one(di, mi):
         # fori_loop (not Python unrolling) keeps the traced epoch body
         # single-copy — compile time is the cohort engine's main fixed cost
         p = jax.lax.fori_loop(
             0, epochs,
-            lambda _, q: mlp_sgd_epoch_masked(q, xi, yi, mi, lr, batch_size),
+            lambda _, q: task.sgd_epoch(q, di, mi, lr, batch_size),
             params)
-        return p, mlp_accuracy_masked(p, xi, yi, mi)
+        return p, task.local_metric(p, di, mi)
 
-    return jax.vmap(one)(x, y, mask)
+    return jax.vmap(one)(data, mask)
 
 
-@partial(jax.jit, static_argnames=("epochs", "batch_size"))
-def cohort_train_multi(stacked_params, x, y, mask, lr, epochs: int,
+@partial(jax.jit, static_argnames=("task", "epochs", "batch_size"))
+def cohort_train_multi(task, stacked_params, data, mask, lr, epochs: int,
                        batch_size: int = 50):
     """``cohort_train`` with *per-client* parameters (leaves (N, ...)).
 
@@ -75,14 +88,14 @@ def cohort_train_multi(stacked_params, x, y, mask, lr, epochs: int,
     Row results are independent, so a row trains identically whether its
     run's cohort is stacked alone or with other runs.
     """
-    def one(p, xi, yi, mi):
+    def one(p, di, mi):
         q = jax.lax.fori_loop(
             0, epochs,
-            lambda _, r: mlp_sgd_epoch_masked(r, xi, yi, mi, lr, batch_size),
+            lambda _, r: task.sgd_epoch(r, di, mi, lr, batch_size),
             p)
-        return q, mlp_accuracy_masked(q, xi, yi, mi)
+        return q, task.local_metric(q, di, mi)
 
-    return jax.vmap(one)(stacked_params, x, y, mask)
+    return jax.vmap(one)(stacked_params, data, mask)
 
 
 def pad_count(n: int, multiple: int = 8) -> int:
@@ -137,33 +150,37 @@ def broadcast_params(params, n: int):
                         params)
 
 
-@jax.jit
-def cohort_eval(stacked_params, x, y, masks):
+@partial(jax.jit, static_argnames=("task",))
+def cohort_eval(task, stacked_params, eval_inputs, y_units, masks):
     """Score every uploaded model on the public test set in one vmap.
 
-    stacked_params — leaves (N, ...); x (T, D), y (T,) — the full test set;
-    masks (N, T) — per-UE evaluation masks (the server restricts Eq. 1's
-    acc_test to the classes a UE claims to hold). Returns (N,) accuracies,
-    0.0 where a mask is empty.
+    stacked_params — leaves (N, ...); eval_inputs — the task's device-side
+    test pytree; y_units (U,) — unit-level labels (test labels for MNIST,
+    next-token targets for the LM); masks (N, U) — per-UE evaluation unit
+    masks (the server restricts Eq. 1's acc_test to the symbols a UE
+    claims to hold). Returns (N,) unit accuracies, 0.0 where a mask is
+    empty.
     """
     def one(p, m):
-        correct = (jnp.argmax(mlp_apply(p, x), -1) == y).astype(jnp.float32)
+        correct = (task.predict_units(p, eval_inputs)
+                   == y_units).astype(jnp.float32)
         return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
 
     return jax.vmap(one)(stacked_params, masks)
 
 
-@jax.jit
-def cohort_eval_rows(stacked_params, x, y_rows, masks):
-    """``cohort_eval`` with per-row labels: y_rows (N, T).
+@partial(jax.jit, static_argnames=("task",))
+def cohort_eval_rows(task, stacked_params, eval_inputs, y_rows, masks):
+    """``cohort_eval`` with per-row labels: y_rows (N, U).
 
     The sweep's metric phase uses it to score the attack success rate —
-    a row whose labels are relabelled to the attack's target class over
-    the source-class mask — alongside the plain accuracy rows, in the
-    same vmapped call.
+    a row whose unit labels are relabelled to the attack's target over
+    the source mask — alongside the plain accuracy rows, in the same
+    vmapped call.
     """
     def one(p, yr, m):
-        correct = (jnp.argmax(mlp_apply(p, x), -1) == yr).astype(jnp.float32)
+        correct = (task.predict_units(p, eval_inputs)
+                   == yr).astype(jnp.float32)
         return jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
 
     return jax.vmap(one)(stacked_params, y_rows, masks)

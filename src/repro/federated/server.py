@@ -2,9 +2,14 @@
 reputation update -> FedAvg aggregate.
 
 The server sees only what the paper allows it to see: dataset *metadata*
-(size, label histogram for the diversity index, staleness), self-reported
+(size, symbol histogram for the diversity index, staleness), self-reported
 local accuracies, uploaded models evaluated on the public test set, and
 channel state. It never touches raw client data.
+
+The model/data pair is a pluggable ``FeelTask`` (federated/task.py): the
+server orchestrates Alg. 1 over the task's jit-static train/eval steps and
+quality metadata, so the paper's MNIST MLP and the federated LM task run
+through the exact same scheduling, threat-model and defense planes.
 
 Two execution engines implement Alg. 1 lines 9-14:
 
@@ -49,17 +54,15 @@ from repro.core import attacks as atk
 from repro.core import defenses as dfs
 from repro.core import (ReputationTracker, WirelessModel, adaptive_weights,
                         data_quality_value, diversity_index, dqs_schedule,
-                        gini_simpson, top_value_schedule)
+                        top_value_schedule)
 from repro.core import control as ctl
 from repro.core.scheduler import (Schedule, best_channel_schedule,
                                   max_count_schedule, random_schedule)
-from repro.data.partition import (ClientData, label_histogram,
+from repro.data.partition import (ClientData, pad_clients,
                                   pad_clients_bucketed)
-from repro.data.synthetic_mnist import Dataset, N_CLASSES
 from repro.federated import cohort
 from repro.federated.aggregation import fedavg, fedavg_stacked
-from repro.federated.client import local_train
-from repro.models.mlp import mlp_accuracy, mlp_init
+from repro.federated.task import FeelTask, as_task
 
 
 @dataclasses.dataclass
@@ -71,6 +74,9 @@ class RoundLog:
     objective: float
     values: np.ndarray
     reputations: np.ndarray
+    # task-defined global loss metric (the LM task's held-out per-token
+    # cross-entropy; NaN for tasks without one, e.g. the MNIST MLP)
+    global_loss: float = float("nan")
     source_acc: float = float("nan")   # accuracy on the attacked class
     # attack success rate: fraction of watched source-class test samples
     # the global model classifies as the attack's TARGET class (NaN when
@@ -100,17 +106,24 @@ class RoundLog:
 class CohortData:
     """Device-resident padded client layout for the vectorized engine.
 
-    ``buckets[b]`` holds one size bucket's stacked arrays (x, y, mask) with
-    one extra all-zero "null client" row appended at index ``null`` —
-    cohort-size padding gathers it for a strict training no-op. Built once
-    per (dataset, partition) and shareable across servers (policies) —
-    ``run_sweep`` exploits this to amortise padding + host-to-device
-    transfer across a whole sweep.
+    ``buckets[b]`` holds one size bucket's stacked per-sample array pytree
+    (``data`` — the task's ``sample_arrays`` fields) and validity mask,
+    laid out as [real client rows | clean twin rows | one all-zero "null
+    client" row at index ``null``] — cohort-size padding gathers the null
+    row for a strict training no-op. The twin rows hold the PRE-POISON
+    data of clients whose partition baked in a data attack
+    (``ClientData.clean``): a round-scheduled (intermittent / colluding)
+    data attack gathers a malicious UE's twin row in its off rounds, so
+    the schedule gates data attacks without re-partitioning or a second
+    device layout. Built once per (dataset, partition) and shareable
+    across servers (policies) — ``run_sweep`` exploits this to amortise
+    padding + host-to-device transfer across a whole sweep.
     """
-    buckets: List[Dict]       # x/y/mask device arrays, level, null row idx
+    buckets: List[Dict]       # data pytree/mask device arrays, level, null
     bucket_of: np.ndarray     # (K,) bucket index per client
     row_of: np.ndarray        # (K,) row within the client's bucket arrays
-    mask_dev: jax.Array       # (K+1, T) per-UE eval masks + null row
+    clean_row_of: np.ndarray  # (K,) clean-twin row, -1 when none exists
+    mask_dev: jax.Array       # (K+1, U) per-UE eval unit masks + null row
     sizes: np.ndarray         # (K,) true sample counts
 
 
@@ -119,18 +132,19 @@ def build_cohort_data(clients: List[ClientData], test_mask_arr: np.ndarray,
                       n_buckets: int = 3) -> CohortData:
     """Bucket, pad and device-place the clients (see CohortData).
 
-    test_mask_arr — (K, T) float {0,1} per-UE evaluation masks (the server
-    restricts Eq. 1's acc_test to the classes a UE claims to hold).
+    test_mask_arr — (K, U) float {0,1} per-UE evaluation unit masks (the
+    server restricts Eq. 1's acc_test to the symbols a UE claims to hold).
     """
     bucketed = pad_clients_bucketed(clients, n_buckets=n_buckets,
                                     multiple_of=batch_size, pad_to=pad_to)
     K = len(clients)
     bucket_of = np.full(K, -1)
     row_of = np.full(K, -1)
+    clean_row_of = np.full(K, -1)
     zrow = lambda a: np.concatenate([a, np.zeros_like(a[:1])])
     buckets = []
     for b, (ids, pd) in enumerate(bucketed):
-        # loop-engine parity contract: the loop's mlp_sgd_epoch DROPS a
+        # loop-engine parity contract: the loop's plain sgd epoch DROPS a
         # tail batch (nb = n // batch_size) while the masked engine would
         # train it, so a non-dividing batch_size must fail loudly
         assert not np.any(pd.sizes % batch_size), (
@@ -138,12 +152,28 @@ def build_cohort_data(clients: List[ClientData], test_mask_arr: np.ndarray,
             "client dataset size (the loop oracle drops tail batches)")
         bucket_of[ids] = b
         row_of[ids] = np.arange(ids.size)
+        arrays = {f: [a] for f, a in pd.arrays.items()}
+        mask_parts = [pd.mask]
+        # clean twins share the poisoned row's size (data attacks preserve
+        # sample counts), so they land in the same bucket level
+        twin_ids = [int(i) for i in ids if clients[i].clean is not None]
+        if twin_ids:
+            tw = pad_clients(
+                [dataclasses.replace(clients[i], data=clients[i].clean,
+                                     clean=None) for i in twin_ids],
+                multiple_of=batch_size, pad_to=pd.max_samples)
+            clean_row_of[twin_ids] = ids.size + np.arange(len(twin_ids))
+            for f in arrays:
+                arrays[f].append(tw.arrays[f])
+            mask_parts.append(tw.mask)
         buckets.append({
-            "x": jnp.asarray(zrow(pd.x)), "y": jnp.asarray(zrow(pd.y)),
-            "mask": jnp.asarray(zrow(pd.mask)),
-            "level": pd.max_samples, "null": ids.size})
+            "data": {f: jnp.asarray(zrow(np.concatenate(parts)))
+                     for f, parts in arrays.items()},
+            "mask": jnp.asarray(zrow(np.concatenate(mask_parts))),
+            "level": pd.max_samples, "null": ids.size + len(twin_ids)})
     return CohortData(
         buckets=buckets, bucket_of=bucket_of, row_of=row_of,
+        clean_row_of=clean_row_of,
         mask_dev=jnp.asarray(zrow(test_mask_arr)),
         sizes=np.array([c.size for c in clients], float))
 
@@ -151,6 +181,13 @@ def build_cohort_data(clients: List[ClientData], test_mask_arr: np.ndarray,
 class FeelServer:
     """policy: 'dqs' | 'random' | 'best_channel' | 'max_count' | 'top_value'.
     'top_value' reproduces §V-B.1 (pure data-quality selection, no wireless).
+
+    task: a ``federated.task.FeelTask`` (or registry name; None defers to
+    ``cfg.task``) — the model/data pair the round trains. The task owns
+    every model-specific step (init, masked local SGD, unit prediction,
+    the loop oracle) and the quality metadata definition (histogram,
+    Gini-Simpson diversity); the server only orchestrates Alg. 1 over it.
+    ``lr``/``batch_size`` default to the task's protocol values when None.
 
     engine: 'vectorized' | 'loop' (see module docstring).
     control: 'batched' | 'host' — the control plane (values -> Eq. 9 costs
@@ -187,25 +224,27 @@ class FeelServer:
                     # zero-weight null clients (shape-stable compiles)
 
     def __init__(self, cfg: FeelConfig, clients: List[ClientData],
-                 test: Dataset, rng: np.random.Generator,
-                 policy: str = "dqs", lr: float = 0.1,
+                 test, rng: np.random.Generator,
+                 policy: str = "dqs", lr: Optional[float] = None,
                  adaptive_omega: bool = False, lie_boost: float = 0.0,
                  watch_class: Optional[int] = None, model_poison=None,
-                 engine: str = "vectorized", batch_size: int = 50,
+                 engine: str = "vectorized",
+                 batch_size: Optional[int] = None,
                  pad_to: Optional[int] = None, n_buckets: int = 3,
                  cohort_data: Optional[CohortData] = None,
                  control: str = "batched",
                  scenario: Optional[atk.AttackScenario] = None,
-                 defense=None):
+                 defense=None, task: Optional[FeelTask] = None):
         assert engine in ("vectorized", "loop"), engine
         assert control in ("batched", "host"), control
         self.control = control
         self.cfg = cfg
+        self.task = as_task(task if task is not None else cfg.task)
         self.clients = clients
         self.test = test
         self.rng = rng
         self.policy = policy
-        self.lr = lr
+        self.lr = self.task.default_lr if lr is None else lr
         self.adaptive_omega = adaptive_omega
         # threat model: either an explicit AttackScenario (data attacks
         # are already baked into ``clients`` by the partition; the server
@@ -230,13 +269,15 @@ class FeelServer:
                             else (watch[0] if watch else None))
         self.watch_target = watch[1] if watch else None
         self.engine = engine
-        self.batch_size = batch_size
+        self.batch_size = (self.task.batch_size if batch_size is None
+                           else batch_size)
         self.pad_to = pad_to        # stable cohort shape across seeds
         self.n_buckets = n_buckets
 
         self.wireless = WirelessModel(cfg, rng)
         self.reputation = ReputationTracker(cfg)
-        self.params = mlp_init(jax.random.PRNGKey(int(rng.integers(1 << 31))))
+        self.params = self.task.init_params(
+            jax.random.PRNGKey(int(rng.integers(1 << 31))))
         self.ages = np.ones(cfg.n_ues)          # rounds since last selected
         self.cpu_hz = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
         self.sizes = np.array([c.size for c in clients], float)
@@ -251,20 +292,24 @@ class FeelServer:
         st = self.scenario.model.staleness if self.scenario.model else 0
         self._param_hist = (collections.deque(maxlen=st + 1) if st > 0
                             else None)
-        # UEs report label histograms once (metadata); poisoned labels are
-        # what the UE *believes*, so the histogram reflects the flip.
-        self.divs = np.array([gini_simpson(c.data.y, N_CLASSES)
-                              for c in clients])
-        self.histograms = [label_histogram(c.data, N_CLASSES) for c in clients]
+        # UEs report their quality metadata once (task-defined: label
+        # histograms for MNIST, token histograms for the LM); poisoned data
+        # is what the UE *believes*, so the report reflects the attack —
+        # including for round-scheduled data attacks, whose one-time report
+        # is the poisoned histogram (metadata is not re-reported per round).
+        self.divs = np.array([self.task.gini(c.data) for c in clients])
+        self.histograms = [self.task.histogram(c.data) for c in clients]
         # Interpretation decision (DESIGN.md): Eq. 1's acc_test is evaluated
-        # on the test subset restricted to the classes a UE claims to hold —
-        # otherwise the reputation punishes honest-but-skewed (non-IID) UEs
-        # exactly as hard as poisoners, which contradicts the paper's Fig. 2.
-        self._test_masks = [np.isin(test.y, np.flatnonzero(h > 0))
+        # on the test UNITS restricted to the symbols a UE claims to hold
+        # (classes / vocabulary) — otherwise the reputation punishes
+        # honest-but-skewed (non-IID) UEs exactly as hard as poisoners,
+        # which contradicts the paper's Fig. 2.
+        unit_labels = self.task.unit_labels(test)
+        self._test_masks = [np.isin(unit_labels, np.flatnonzero(h > 0))
                             for h in self.histograms]
         self._test_mask_arr = np.stack(self._test_masks).astype(np.float32)
-        self._tx = jax.numpy.asarray(test.x)
-        self._ty = jax.numpy.asarray(test.y)
+        self._ex = self.task.eval_inputs(test)
+        self._ey = self.task.unit_targets(test)
         # defense plane (core/defenses.py, DESIGN.md §9): robust
         # aggregation replaces/augments FedAvg in _aggregate_cohort, the
         # validation detector scores every upload on a held-out split
@@ -274,14 +319,14 @@ class FeelServer:
                                       else cfg.defense)
         det = self.defense.detector
         if det is not None:
-            # validation split: the first n_val test rows, restricted per
-            # UE to the classes it claims to hold (the same masking
-            # argument as Eq. 1's acc_test, DESIGN.md §2 — an unmasked
-            # score cannot tell an honest non-IID UE from a noise UE).
-            # The detector's novelty over Eq. 1 is using the ABSOLUTE
+            # validation split: the units of the first n_val test rows,
+            # restricted per UE to the symbols it claims to hold (the same
+            # masking argument as Eq. 1's acc_test, DESIGN.md §2 — an
+            # unmasked score cannot tell an honest non-IID UE from a noise
+            # UE). The detector's novelty over Eq. 1 is using the ABSOLUTE
             # cohort-relative level of this score, not a report gap.
             self._n_val = min(det.n_val, len(test.y))
-            val_rows = (np.arange(len(test.y)) < self._n_val)
+            val_rows = self.task.unit_rows(test) < self._n_val
             self._val_masks = [m & val_rows for m in self._test_masks]
             arr = self._test_mask_arr * val_rows.astype(np.float32)[None]
             self._val_mask_dev = jnp.asarray(
@@ -334,9 +379,19 @@ class FeelServer:
     # ------------------------------------------------------------------ #
     def _run_cohort_loop(self, sel: np.ndarray, t: int):
         cfg = self.cfg
-        reports = [local_train(self.clients[k], self.params,
-                               cfg.local_epochs, self.lr,
-                               batch_size=self.batch_size) for k in sel]
+        # round-scheduled data attacks: an inactive malicious UE trains on
+        # its clean twin this round (the loop-engine mirror of the
+        # vectorized engine's twin-row gather, see CohortData)
+        active = self.scenario.schedule.active(t, self._mal_mask,
+                                               self._mal_rank)
+        reports = []
+        for k in sel:
+            c = self.clients[k]
+            if c.clean is not None and not active[k]:
+                c = dataclasses.replace(c, data=c.clean, clean=None)
+            reports.append(self.task.local_train(
+                c, self.params, cfg.local_epochs, self.lr,
+                self.batch_size))
         acc_local = np.array([r.acc_local for r in reports])
         params_list = [r.params for r in reports]
 
@@ -344,21 +399,20 @@ class FeelServer:
         # oracle the masked batched path is pinned against
         scn = self.scenario
         ref = self._attack_ref_params()
-        mal = self._active_malicious(sel, t)
+        mal = active[sel]
         if scn.model is not None:
             params_list = [scn.model.apply_host(self.params, p, ref)
                            if m else p for p, m in zip(params_list, mal)]
         if scn.report is not None:
             acc_local = scn.report.apply(acc_local, mal)
 
-        # server-side evaluation of every uploaded model (Alg. 1 line 14) on
-        # the classes each UE claims to hold (see __init__ note)
+        # server-side evaluation of every uploaded model (Alg. 1 line 14)
+        # on the units of the symbols each UE claims to hold (see
+        # __init__ note)
         acc_test = np.empty(len(reports))
         for i, (p, k) in enumerate(zip(params_list, sel)):
-            m = self._test_masks[k]
-            acc_test[i] = float(mlp_accuracy(
-                p, jax.numpy.asarray(self.test.x[m]),
-                jax.numpy.asarray(self.test.y[m]))) if m.any() else 0.0
+            acc_test[i] = self.task.eval_units_host(p, self.test,
+                                                    self._test_masks[k])
 
         # defense plane, host-oracle side: per-client validation pass
         # (upload AND start-of-round global model on each UE's masked val
@@ -369,11 +423,10 @@ class FeelServer:
             for i, (p, k) in enumerate(zip(params_list, sel)):
                 m = self._val_masks[k]
                 if m.any():
-                    xs = jax.numpy.asarray(self.test.x[m])
-                    ys = jax.numpy.asarray(self.test.y[m])
-                    acc_val[0, i] = float(mlp_accuracy(p, xs, ys))
-                    acc_val[1, i] = float(mlp_accuracy(self.params, xs,
-                                                       ys))
+                    acc_val[0, i] = self.task.eval_units_host(
+                        p, self.test, m)
+                    acc_val[1, i] = self.task.eval_units_host(
+                        self.params, self.test, m)
         agg = self.defense.aggregator
         weights = [r.n_samples for r in reports]
         if agg is None:
@@ -397,23 +450,32 @@ class FeelServer:
                 n_buckets=self.n_buckets)
         return self._cohort_data
 
-    def _cohort_parts(self, sel: np.ndarray, pad: bool = True):
-        """Split the round's cohort per size bucket.
+    def _cohort_parts(self, sel: np.ndarray, t: int, pad: bool = True):
+        """Split round ``t``'s cohort per size bucket.
 
-        Yields ``(bucket, positions_in_sel, row_ids)``. With ``pad`` the
-        row ids are padded to a multiple of _N_BUCKET with the bucket's
-        null client (mask all-zero -> training no-op, weight 0 downstream),
-        so rounds with new cohort sizes reuse the compiled per-bucket step
-        instead of re-tracing — the exact pathology this engine replaces.
-        The sweep runner passes ``pad=False`` and pads the cross-run batch
-        once instead.
+        Yields ``(bucket, positions_in_sel, row_ids)``. A malicious UE
+        whose data attack is INACTIVE in round t (round-scheduled
+        scenarios) maps to its clean twin row instead of its poisoned row
+        (see CohortData) — for always-on schedules the mapping is the
+        identity, bit-for-bit. With ``pad`` the row ids are padded to a
+        multiple of _N_BUCKET with the bucket's null client (mask all-zero
+        -> training no-op, weight 0 downstream), so rounds with new cohort
+        sizes reuse the compiled per-bucket step instead of re-tracing —
+        the exact pathology this engine replaces. The sweep runner passes
+        ``pad=False`` and pads the cross-run batch once instead.
         """
         cd = self._ensure_cohort_data()
+        rows_of = cd.row_of
+        if np.any(cd.clean_row_of >= 0):
+            active = self.scenario.schedule.active(t, self._mal_mask,
+                                                   self._mal_rank)
+            use_clean = ~active & (cd.clean_row_of >= 0)
+            rows_of = np.where(use_clean, cd.clean_row_of, cd.row_of)
         for b, bkt in enumerate(cd.buckets):
             pos = np.flatnonzero(cd.bucket_of[sel] == b)
             if pos.size == 0:
                 continue
-            rows = cd.row_of[sel[pos]]
+            rows = rows_of[sel[pos]]
             if pad:
                 n_pad = cohort.pad_count(pos.size, self._N_BUCKET)
                 rows = np.concatenate(
@@ -422,10 +484,10 @@ class FeelServer:
             yield bkt, pos, rows
 
     def _gather_bucket(self, bkt: Dict, rows: np.ndarray):
-        """Device-side gather of a bucket's (x, y, mask) cohort rows."""
+        """Device-side gather of a bucket's (data pytree, mask) rows."""
         idx = jnp.asarray(rows)
-        return (jnp.take(bkt["x"], idx, axis=0),
-                jnp.take(bkt["y"], idx, axis=0),
+        return ({f: jnp.take(a, idx, axis=0)
+                 for f, a in bkt["data"].items()},
                 jnp.take(bkt["mask"], idx, axis=0))
 
     @staticmethod
@@ -520,11 +582,11 @@ class FeelServer:
         cd = self._ensure_cohort_data()
         n = sel.size
         parts, pad_slots = [], 0
-        for bkt, pos, rows in self._cohort_parts(sel):
-            xs, ys, ms = self._gather_bucket(bkt, rows)
+        for bkt, pos, rows in self._cohort_parts(sel, t):
+            data, ms = self._gather_bucket(bkt, rows)
             stacked_b, acc_b = cohort.cohort_train(
-                self.params, xs, ys, ms, self.lr, cfg.local_epochs,
-                self.batch_size)
+                self.task, self.params, data, ms, self.lr,
+                cfg.local_epochs, self.batch_size)
             parts.append((pos,
                           jax.tree.map(lambda l, m=pos.size: l[:m],
                                        stacked_b),
@@ -542,7 +604,7 @@ class FeelServer:
         n_pad = cohort.pad_count(n, self._N_BUCKET)
         stacked_p = cohort.pad_stacked(stacked, n_pad)
         acc_test = np.asarray(
-            cohort.cohort_eval(stacked_p, self._tx, self._ty,
+            cohort.cohort_eval(self.task, stacked_p, self._ex, self._ey,
                                self._eval_masks(sel, n_pad)), float)[:n]
         acc_val = self._eval_validation(stacked_p, sel)
         self._aggregate_cohort(sel, stacked_p)
@@ -568,7 +630,7 @@ class FeelServer:
         both = cohort.merge_stacks(
             [stacked_p, cohort.broadcast_params(self.params, n_pad)])
         acc = np.asarray(
-            cohort.cohort_eval(both, self._tx, self._ty,
+            cohort.cohort_eval(self.task, both, self._ex, self._ey,
                                jnp.concatenate([vm, vm])), float)
         return np.stack([acc[:n], acc[n_pad:n_pad + n]])
 
@@ -662,7 +724,8 @@ class FeelServer:
 
     def _finalize_round(self, t: int, values, sched, sel, forced,
                         acc_local, acc_test, g_acc, src_acc,
-                        atk_succ=float("nan"), acc_val=None) -> RoundLog:
+                        atk_succ=float("nan"), acc_val=None,
+                        g_loss=float("nan")) -> RoundLog:
         """Alg. 1 lines 15-16 + logging: detector penalty, reputation,
         staleness, RoundLog."""
         penalty = self._detect(sel, acc_val)
@@ -679,16 +742,17 @@ class FeelServer:
             self.ages += 1.0
             self.ages[sel] = 1.0
         return self._log_round(t, values, sched, sel, forced, g_acc,
-                               src_acc, atk_succ)
+                               src_acc, atk_succ, g_loss)
 
     def _log_round(self, t: int, values, sched, sel, forced, g_acc,
-                   src_acc, atk_succ=float("nan")) -> RoundLog:
+                   src_acc, atk_succ=float("nan"),
+                   g_loss=float("nan")) -> RoundLog:
         """Append the RoundLog for a finalized round (reputation/ages
         already updated — the batched sweep runner updates ALL runs in one
         ``control.finalize_runs`` call and then logs per run)."""
         ds = self._def_stats
         log = RoundLog(
-            round=t, selected=sel, global_acc=g_acc,
+            round=t, selected=sel, global_acc=g_acc, global_loss=g_loss,
             n_malicious_selected=sum(self.clients[k].malicious for k in sel),
             objective=0.0 if forced else sched.objective(),
             values=values.copy(),
@@ -703,32 +767,29 @@ class FeelServer:
         self.logs.append(log)
         return log
 
-    def _global_metrics(self) -> Tuple[float, float, float]:
-        """(global test accuracy, watch-class accuracy, attack success
-        rate) of the current params. Attack success is the fraction of
-        watched source-class test samples classified as the scenario's
-        TARGET class (NaN without a watched pair)."""
-        g_acc = float(mlp_accuracy(self.params, self._tx, self._ty))
-        src_acc = atk_succ = float("nan")
-        if self.watch_class is not None:
-            m = self.test.y == self.watch_class
-            if m.any():
-                xs = jax.numpy.asarray(self.test.x[m])
-                src_acc = float(mlp_accuracy(
-                    self.params, xs, jax.numpy.asarray(self.test.y[m])))
-                if self.watch_target is not None:
-                    tgt = jnp.full(int(m.sum()), self.watch_target,
-                                   self._ty.dtype)
-                    atk_succ = float(mlp_accuracy(self.params, xs, tgt))
-        return g_acc, src_acc, atk_succ
+    def _global_metrics(self) -> Tuple[float, float, float, float]:
+        """(global unit accuracy, global loss, watch accuracy, attack
+        success rate) of the current params — task-defined (NaN loss for
+        tasks without one). Attack success is the fraction of watched
+        source units classified as the scenario's TARGET symbol (NaN
+        without a watched pair)."""
+        return self.task.global_metrics(self.params, self.test, self._ex,
+                                        self._ey, self.watch_class,
+                                        self.watch_target)
+
+    def _global_loss(self) -> float:
+        """The task's global loss metric alone (the stacked sweep computes
+        accuracies through its batched eval and only needs this extra)."""
+        loss = self.task.eval_loss(self.params, self._ex)
+        return float("nan") if loss is None else float(loss)
 
     def run_round(self, t: int) -> RoundLog:
         values, sched, sel, forced = self._schedule_round(t)
         acc_local, acc_test, acc_val = self._train_cohort(sel, t)
-        g_acc, src_acc, atk_succ = self._global_metrics()
+        g_acc, g_loss, src_acc, atk_succ = self._global_metrics()
         return self._finalize_round(t, values, sched, sel, forced,
                                     acc_local, acc_test, g_acc, src_acc,
-                                    atk_succ, acc_val)
+                                    atk_succ, acc_val, g_loss)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         for t in range(rounds or self.cfg.rounds):

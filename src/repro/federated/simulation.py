@@ -8,27 +8,38 @@ Protocol (paper §V-A): synthetic-MNIST 50k/10k; sort-by-label groups of 50;
 ((6,2) easy / (8,4) hard); 2-layer MLP via FedAvg; 15 rounds; results
 averaged over independent runs.
 
+The model/data pair is a ``FeelTask`` (federated/task.py) and a first-class
+sweep axis: ``run_experiment(task="lm_tiny")`` runs the same DQS protocol
+on federated LM fine-tuning, and ``run_sweep(tasks=[...])`` crosses tasks
+with scenarios, defenses, policies and seeds in ONE invocation — per-task
+batched cohorts share one batched control plane, because the control plane
+(Eq. 1-3, Eq. 9, Alg. 2) never touches the model.
+
 ``engine`` selects the cohort execution path: "vectorized" (default) runs
 every scheduled UE in one vmapped step; "loop" is the original sequential
 per-client oracle (see federated/server.py).
 
 ``run_sweep`` is the recommended entry point for multi-seed studies
-(§V averages, robustness sweeps): it generates each seed's dataset once,
-shares each (seed, data-attack) partition and its device-resident padded
-layout across policies (and across scenarios with identical poisoned
-data), and — where shapes allow (same cfg => same padded bucket levels) —
-stacks the per-round cohorts of ALL runs into one
-``cohort_train_multi``/``cohort_eval`` call per size bucket, so seeds,
+(§V averages, robustness sweeps): it generates each (task, seed) dataset
+once, shares each (task, seed, data-attack) partition and its
+device-resident padded layout across policies (and across scenarios with
+identical poisoned data), and — where shapes allow (same cfg => same
+padded bucket levels) — stacks the per-round cohorts of a task's runs into
+one ``cohort_train_multi``/``cohort_eval`` call per size bucket, so seeds,
 policies and threat scenarios become one more slice of the vmapped client
 axis. Every run reproduces its sequential ``run_experiment`` twin exactly
 (same RNG streams; tests/test_sweep.py pins the parity).
 
 The threat-model axis (``scenarios=[...]``) runs heterogeneous attack
-scenarios — label-flip variants, feature noise, free-riders, model
-poisoning, colluding schedules (core/attacks.py, DESIGN.md §8) — in the
-same stacked sweep; ``attack_pairs`` survives as a back-compat shim. The
-defense axis (``defenses=[...]``) crosses every scenario with a
-server-side counter-measure (core/defenses.py, DESIGN.md §9: robust
+scenarios — label-flip variants, feature noise, token attacks, free-riders,
+model poisoning, colluding schedules (core/attacks.py, DESIGN.md §8) — in
+the same stacked sweep; ``attack_pairs`` survives as a back-compat shim.
+Data attacks are dataset-typed (label/feature attacks need feature
+datasets, token attacks need token datasets — ``attacks.poison_dataset``
+fails loudly on a mismatch), so a mixed-task grid crosses tasks with
+data-free scenarios (model/report attacks, "none") or task-compatible
+data attacks. The defense axis (``defenses=[...]``) crosses every scenario
+with a server-side counter-measure (core/defenses.py, DESIGN.md §9: robust
 aggregation + validation detection) at zero extra partition/layout cost —
 defenses are deterministic, so (scenario x defense) cells share the
 scenario's partitions and RNG streams.
@@ -48,17 +59,17 @@ from repro.core import control as ctl
 from repro.core import defenses as dfs
 from repro.core.poisoning import pick_malicious
 from repro.core.scheduler import Schedule
-from repro.data.partition import label_histogram, partition
-from repro.data.synthetic_mnist import N_CLASSES, generate
 from repro.federated import cohort
 from repro.federated.server import FeelServer, build_cohort_data
+from repro.federated.task import FeelTask, as_task
 
 
 def run_experiment(policy: str = "dqs",
                    attack_pair: Tuple[int, int] = (6, 2),
                    cfg: Optional[FeelConfig] = None,
                    seed: int = 0,
-                   n_train: int = 50_000, n_test: int = 10_000,
+                   n_train: Optional[int] = None,
+                   n_test: Optional[int] = None,
                    omega: Optional[Tuple[float, float]] = None,
                    adaptive_omega: bool = False,
                    rounds: Optional[int] = None,
@@ -67,8 +78,13 @@ def run_experiment(policy: str = "dqs",
                    lie_boost: float = 0.0,
                    engine: str = "vectorized",
                    control: str = "batched",
-                   scenario=None, defense=None) -> Dict:
+                   scenario=None, defense=None,
+                   task: Optional[FeelTask] = None) -> Dict:
     """One FEEL experiment; returns the per-round curves + run summary.
+
+    ``task`` — a ``federated.task.FeelTask`` (object or registry name;
+    None defers to ``cfg.task``, default the paper's ``mnist_mlp``).
+    ``n_train``/``n_test`` default to the task's protocol sizes.
 
     Threat model — either an explicit ``scenario`` (an
     ``core.attacks.AttackScenario``, a registry name, or a legacy
@@ -93,8 +109,12 @@ def run_experiment(policy: str = "dqs",
     DESIGN.md §9).
     """
     cfg = cfg or FeelConfig()
+    tsk = as_task(task if task is not None else cfg.task)
+    cfg = dataclasses.replace(cfg, task=tsk.name)
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0], omega_div=omega[1])
+    n_train = tsk.default_n_train if n_train is None else n_train
+    n_test = tsk.default_n_test if n_test is None else n_test
     if scenario is not None:
         assert (not no_attack and model_poison_scale is None
                 and not lie_boost and tuple(attack_pair) == (6, 2)), \
@@ -105,18 +125,22 @@ def run_experiment(policy: str = "dqs",
         scn = atk.legacy_scenario(attack_pair, no_attack,
                                   model_poison_scale, lie_boost)
     rng = np.random.default_rng(seed)
-    train, test = generate(n_train, n_test, seed=seed)
+    train, test = tsk.generate_data(n_train, n_test, seed)
     malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
-    clients = partition(train, cfg.n_ues, rng,
-                        None if scn.benign else malicious, scn.data)
+    clients = tsk.partition_clients(train, cfg.n_ues, rng,
+                                    None if scn.benign else malicious,
+                                    scn.data)
     server = FeelServer(cfg, clients, test, rng, policy=policy,
                         adaptive_omega=adaptive_omega, scenario=scn,
-                        engine=engine, control=control, defense=defense)
+                        engine=engine, control=control, defense=defense,
+                        task=tsk)
     logs = server.run(rounds)
     return {
+        "task": tsk.name,
         "scenario": scn.name,
         "defense": server.defense.name,
         "acc": [l.global_acc for l in logs],
+        "loss": [l.global_loss for l in logs],
         "source_acc": [l.source_acc for l in logs],
         "attack_success": [l.attack_success for l in logs],
         "malicious_selected": [l.n_malicious_selected for l in logs],
@@ -142,15 +166,16 @@ def run_experiment(policy: str = "dqs",
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass
 class SweepResult:
-    """Tidy results of a (policies x seeds x scenarios x defenses) sweep.
+    """Tidy results of a (tasks x policies x seeds x scenarios x defenses)
+    sweep.
 
-    rows — one record per (policy, seed, scenario, defense, round) with
-        the per-round metrics (acc, source_acc, attack_success,
+    rows — one record per (task, policy, seed, scenario, defense, round)
+        with the per-round metrics (acc, loss, source_acc, attack_success,
         malicious_selected, objective, rep_gap, forced, and the defense
         metrics n_clipped / n_rejected / n_flagged / det_precision /
         det_recall).
     runs — one record per run, shaped exactly like ``run_experiment``'s
-        return value plus the (policy, seed, scenario, defense,
+        return value plus the (task, policy, seed, scenario, defense,
         attack_pair) key (``attack_pair`` is the scenario's watched pair,
         None if it has none — kept for back-compat with pair-keyed
         callers).
@@ -159,8 +184,8 @@ class SweepResult:
     runs: List[Dict]
 
     def select(self, **key) -> List[Dict]:
-        """Run summaries matching e.g. policy=..., seed=..., scenario=...,
-        defense=..."""
+        """Run summaries matching e.g. task=..., policy=..., seed=...,
+        scenario=..., defense=..."""
         return [r for r in self.runs
                 if all(r[k] == v for k, v in key.items())]
 
@@ -194,11 +219,12 @@ class SweepResult:
 
 
 class _SweepRun:
-    """One (policy, seed, scenario, defense) run's server + in-flight
-    round state."""
+    """One (task, policy, seed, scenario, defense) run's server +
+    in-flight round state."""
 
-    def __init__(self, policy, seed, scenario, defense, server, malicious,
-                 watch_mask, ty_target):
+    def __init__(self, task, policy, seed, scenario, defense, server,
+                 malicious, watch_mask, ty_target):
+        self.task = task
         self.policy = policy
         self.seed = seed
         self.scenario = scenario
@@ -206,26 +232,29 @@ class _SweepRun:
         self.pair = scenario.watch         # back-compat attack_pair key
         self.server = server
         self.malicious = malicious
-        self.watch_mask = watch_mask       # (T,) float32, source-class rows
-        self.ty_target = ty_target         # (T,) labels relabelled to the
-        #                                    attack target (== ty if none)
+        self.watch_mask = watch_mask       # (U,) float32, source-unit rows
+        self.ty_target = ty_target         # (U,) unit labels relabelled to
+        #                                    the attack target (== ey if none)
         self.plan = None                   # (values, sched, sel, forced)
         self.stacked = None                # merged cohort params (sel order)
         self.acc_local = None
         self.acc_test = None
         self.acc_val = None                # detector validation accuracies
         self.g_acc = float("nan")
+        self.g_loss = float("nan")
         self.src_acc = float("nan")
         self.atk_succ = float("nan")
 
     def summary(self) -> Dict:
         s = self.server
         return {
+            "task": self.task.name,
             "policy": self.policy, "seed": self.seed,
             "scenario": self.scenario.name,
             "defense": self.defense.name,
             "attack_pair": self.pair,
             "acc": [l.global_acc for l in s.logs],
+            "loss": [l.global_loss for l in s.logs],
             "source_acc": [l.source_acc for l in s.logs],
             "attack_success": [l.attack_success for l in s.logs],
             "malicious_selected": [l.n_malicious_selected for l in s.logs],
@@ -251,9 +280,11 @@ class _SweepRun:
 def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               attack_pairs: Sequence[Tuple[int, int]] = ((6, 2),),
               cfg: Optional[FeelConfig] = None, *,
+              tasks: Optional[Sequence] = None,
               scenarios: Optional[Sequence] = None,
               defenses: Optional[Sequence] = None,
-              n_train: int = 50_000, n_test: int = 10_000,
+              n_train: Optional[int] = None,
+              n_test: Optional[int] = None,
               omega: Optional[Tuple[float, float]] = None,
               adaptive_omega: bool = False,
               rounds: Optional[int] = None,
@@ -264,7 +295,19 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               control: str = "batched",
               n_buckets: int = 3,
               stack_runs: bool = True) -> SweepResult:
-    """Run the full (policies x seeds x scenarios x defenses) grid batched.
+    """Run the full (tasks x policies x seeds x scenarios x defenses) grid
+    batched.
+
+    The task axis: ``tasks`` is a sequence of ``federated.task.FeelTask``
+    specs (objects or registry names; None = the single ``cfg.task``
+    default) — the model/data pair becomes one more sweep axis. Tasks
+    cannot share parameter pytrees, so the cohort phases batch WITHIN each
+    task while the control plane (schedule + Eq. 1 reputation, which never
+    touches the model) still runs ONE vmapped kernel across every run of
+    every task. Per-run metrics gain the ``task`` key and the
+    task-defined ``loss`` curve (NaN for tasks without one). Data attacks
+    are dataset-typed — cross tasks with data-free scenarios or
+    task-compatible data attacks (module docstring).
 
     The defense axis: ``defenses`` is a sequence of
     ``core.defenses.DefensePolicy`` specs (objects or registry names;
@@ -278,27 +321,27 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
     The threat-model axis: ``scenarios`` is a sequence of
     ``core.attacks.AttackScenario`` specs (scenario objects, registry
     names, or legacy ``(source, target)`` pairs) — HETEROGENEOUS threat
-    models (label-flip variants, feature noise, free-riders, model
-    poisoning, colluding schedules, ...) run as one stacked sweep through
-    the bucketed engine and batched control plane. When ``scenarios`` is
-    None the legacy ``attack_pairs`` + ``no_attack`` /
-    ``model_poison_scale`` / ``lie_boost`` knobs are shimmed into one
-    scenario per pair (``attacks.legacy_scenario`` — same contract as
-    ``run_experiment``); the legacy knobs must stay at their defaults
-    when ``scenarios`` is given.
+    models (label-flip variants, feature noise, token attacks,
+    free-riders, model poisoning, colluding schedules, ...) run as one
+    stacked sweep through the bucketed engine and batched control plane.
+    When ``scenarios`` is None the legacy ``attack_pairs`` +
+    ``no_attack`` / ``model_poison_scale`` / ``lie_boost`` knobs are
+    shimmed into one scenario per pair (``attacks.legacy_scenario`` —
+    same contract as ``run_experiment``); the legacy knobs must stay at
+    their defaults when ``scenarios`` is given.
 
-    Semantics: every run is exactly ``run_experiment(policy,
+    Semantics: every run is exactly ``run_experiment(policy, task=tsk,
     scenario=scn, seed=seed, ...)`` — same datasets, partitions and RNG
-    streams — but the sweep (1) generates each seed's dataset once,
-    (2) builds each (seed, data-attack) partition and its device-resident
-    padded bucket layout once, shared across policies AND across
-    scenarios whose poisoned data is identical (e.g. every pure
+    streams — but the sweep (1) generates each (task, seed) dataset once,
+    (2) builds each (task, seed, data-attack) partition and its
+    device-resident padded bucket layout once, shared across policies AND
+    across scenarios whose poisoned data is identical (e.g. every pure
     model-poisoning scenario shares the clean ``mal_only`` partition),
     and (3) with ``stack_runs`` and the vectorized engine,
-    trains/evaluates the per-round cohorts of ALL runs in one vmapped
-    call per size bucket: a shared ``pad_to`` makes the bucket levels
-    identical across runs, so runs become one more slice of the stacked
-    client axis (``cohort.cohort_train_multi``).
+    trains/evaluates the per-round cohorts of a task's runs in one
+    vmapped call per size bucket: a shared per-task ``pad_to`` makes the
+    bucket levels identical across runs, so runs become one more slice of
+    the stacked client axis (``cohort.cohort_train_multi``).
 
     ``control="batched"`` (default) also stacks the *control plane*: with
     ``stack_runs``, round t of every run is scheduled by ONE vmapped
@@ -311,6 +354,9 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
     ``stack_runs=False`` (or engine="loop") executes the runs sequentially
     while still sharing the dataset/partition caches — the oracle the
     batched path is tested against.
+
+    ``n_train``/``n_test`` default per task (each task's protocol sizes);
+    an explicit value applies to every task in the grid.
     """
     cfg = cfg or FeelConfig()
     if omega is not None:
@@ -318,6 +364,10 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                                   omega_div=omega[1])
     policies = list(policies)
     seeds = [int(s) for s in seeds]
+    tsks = ([as_task(cfg.task)] if tasks is None
+            else [as_task(t) for t in tasks])
+    assert len({t.name for t in tsks}) == len(tsks), \
+        "duplicate task names in the tasks axis"
     if scenarios is None:
         scns = [atk.legacy_scenario(tuple(p), no_attack,
                                     model_poison_scale, lie_boost)
@@ -332,73 +382,92 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
     dfns = ([dfs.as_defense(cfg.defense)] if defenses is None
             else [dfs.as_defense(d) for d in defenses])
 
-    # -- shared caches ------------------------------------------------- #
-    data_cache = {s: generate(n_train, n_test, seed=s) for s in set(seeds)}
+    # -- shared caches (all keyed per task) ------------------------------ #
+    data_cache = {
+        (tsk.name, s): tsk.generate_data(
+            n_train if n_train is not None else tsk.default_n_train,
+            n_test if n_test is not None else tsk.default_n_test, s)
+        for tsk in tsks for s in set(seeds)}
 
     part_cache: Dict = {}
-    for seed in set(seeds):
-        for scn in scns:
-            key = (seed, scn.data_key())
-            if key in part_cache:
-                continue
-            train, test = data_cache[seed]
-            rng = np.random.default_rng(seed)
-            malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
-            clients = partition(train, cfg.n_ues, rng,
-                                None if scn.benign else malicious,
-                                scn.data)
-            # freeze the post-partition RNG state: each run restores it so
-            # its downstream stream (wireless placement, channel draws)
-            # matches its sequential run_experiment twin exactly
-            part_cache[key] = (clients, malicious, rng.bit_generator.state)
+    for tsk in tsks:
+        for seed in set(seeds):
+            for scn in scns:
+                key = (tsk.name, seed, scn.data_key())
+                if key in part_cache:
+                    continue
+                train, test = data_cache[(tsk.name, seed)]
+                rng = np.random.default_rng(seed)
+                malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+                clients = tsk.partition_clients(
+                    train, cfg.n_ues, rng,
+                    None if scn.benign else malicious, scn.data)
+                # freeze the post-partition RNG state: each run restores it
+                # so its downstream stream (wireless placement, channel
+                # draws) matches its sequential run_experiment twin exactly
+                part_cache[key] = (clients, malicious,
+                                   rng.bit_generator.state)
 
-    # one pad_to across the whole sweep => identical bucket levels =>
-    # every compiled per-bucket program is shared by all runs
-    pad_to = max(c.size for clients, _, _ in part_cache.values()
-                 for c in clients)
+    # one pad_to per task across the whole sweep => identical bucket
+    # levels => every compiled per-bucket program is shared by that
+    # task's runs
+    pad_to = {
+        tsk.name: max(c.size for (tn, _, _), (clients, _, _)
+                      in part_cache.items() if tn == tsk.name
+                      for c in clients)
+        for tsk in tsks}
 
     cohort_cache: Dict = {}
     if engine == "vectorized":
-        for (seed, akey), (clients, _, _) in part_cache.items():
-            _, test = data_cache[seed]
-            hists = [label_histogram(c.data, N_CLASSES) for c in clients]
-            mask_arr = np.stack(
-                [np.isin(test.y, np.flatnonzero(h > 0))
-                 for h in hists]).astype(np.float32)
-            cohort_cache[(seed, akey)] = build_cohort_data(
-                clients, mask_arr, pad_to=pad_to, n_buckets=n_buckets)
+        for tsk in tsks:
+            for (tn, seed, akey), (clients, _, _) in part_cache.items():
+                if tn != tsk.name:
+                    continue
+                _, test = data_cache[(tn, seed)]
+                unit_labels = tsk.unit_labels(test)
+                hists = [tsk.histogram(c.data) for c in clients]
+                mask_arr = np.stack(
+                    [np.isin(unit_labels, np.flatnonzero(h > 0))
+                     for h in hists]).astype(np.float32)
+                cohort_cache[(tn, seed, akey)] = build_cohort_data(
+                    clients, mask_arr, batch_size=tsk.batch_size,
+                    pad_to=pad_to[tn], n_buckets=n_buckets)
 
     runs: List[_SweepRun] = []
-    for scn in scns:
-        for dfn in dfns:
-            for seed in seeds:
-                for policy in policies:
-                    clients, malicious, rng_state = \
-                        part_cache[(seed, scn.data_key())]
-                    _, test = data_cache[seed]
-                    rng = np.random.default_rng(seed)
-                    rng.bit_generator.state = rng_state
-                    server = FeelServer(
-                        cfg, clients, test, rng, policy=policy,
-                        adaptive_omega=adaptive_omega, scenario=scn,
-                        engine=engine, defense=dfn,
-                        control=control, pad_to=pad_to,
-                        n_buckets=n_buckets,
-                        cohort_data=cohort_cache.get((seed,
-                                                      scn.data_key())))
-                    watch = ((test.y == scn.watch[0]).astype(np.float32)
-                             if scn.watch else
-                             np.zeros_like(test.y, np.float32))
-                    ty_target = (np.full_like(test.y, scn.watch[1])
-                                 if scn.watch else test.y)
-                    runs.append(_SweepRun(policy, seed, scn, dfn, server,
-                                          malicious, watch,
-                                          jnp.asarray(ty_target)))
+    for tsk in tsks:
+        cfg_t = dataclasses.replace(cfg, task=tsk.name)
+        for scn in scns:
+            for dfn in dfns:
+                for seed in seeds:
+                    for policy in policies:
+                        key = (tsk.name, seed, scn.data_key())
+                        clients, malicious, rng_state = part_cache[key]
+                        _, test = data_cache[(tsk.name, seed)]
+                        rng = np.random.default_rng(seed)
+                        rng.bit_generator.state = rng_state
+                        server = FeelServer(
+                            cfg_t, clients, test, rng, policy=policy,
+                            adaptive_omega=adaptive_omega, scenario=scn,
+                            engine=engine, defense=dfn,
+                            control=control, pad_to=pad_to[tsk.name],
+                            n_buckets=n_buckets, task=tsk,
+                            cohort_data=cohort_cache.get(key))
+                        unit_labels = tsk.unit_labels(test)
+                        watch = ((unit_labels == scn.watch[0])
+                                 .astype(np.float32) if scn.watch else
+                                 np.zeros(unit_labels.size, np.float32))
+                        ty_target = (np.full_like(unit_labels,
+                                                  scn.watch[1])
+                                     if scn.watch else unit_labels)
+                        runs.append(_SweepRun(tsk, policy, seed, scn, dfn,
+                                              server, malicious, watch,
+                                              jnp.asarray(ty_target)))
 
     n_rounds = rounds or cfg.rounds
     if stack_runs and engine == "vectorized":
         # sweep-wide control state: ONE vmapped schedule / reputation
-        # kernel call per round for ALL runs (core/control.py)
+        # kernel call per round for ALL runs — of every task
+        # (core/control.py; the control plane is model-free)
         sweep_ctrl = (ctl.ControlState.from_servers(
             [r.server for r in runs]) if control == "batched" else None)
         for t in range(n_rounds):
@@ -409,10 +478,12 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                 run.server.run_round(t)
 
     rows = [
-        {"policy": run.policy, "seed": run.seed,
+        {"task": run.task.name,
+         "policy": run.policy, "seed": run.seed,
          "scenario": run.scenario.name, "defense": run.defense.name,
          "attack_pair": run.pair,
-         "round": l.round, "acc": l.global_acc, "source_acc": l.source_acc,
+         "round": l.round, "acc": l.global_acc, "loss": l.global_loss,
+         "source_acc": l.source_acc,
          "attack_success": l.attack_success,
          "malicious_selected": l.n_malicious_selected,
          "objective": l.objective, "rep_gap": l.rep_gap,
@@ -447,36 +518,18 @@ def _schedule_runs_stacked(runs: List[_SweepRun],
         run.plan = (values[i], sched, sched.selected, bool(forced[i]))
 
 
-def _sweep_round_stacked(runs: List[_SweepRun], t: int,
-                         sweep_ctrl: Optional[ctl.ControlState]
-                         = None) -> None:
-    """One round of every run, batched: one vmapped control-plane call for
-    all runs' schedules (host numpy per run when ``sweep_ctrl`` is None),
-    then one ``cohort_train_multi`` per (shared client arrays, size bucket)
-    group, one ``cohort_eval`` per seed for the uploaded models, per-run
-    FedAvg, one ``cohort_eval`` per seed for the global/source-class
-    metrics, and one batched Eq. 1 reputation update.
-
-    All device-side reshuffling uses gathers (``jnp.take``) whose compile
-    cache is keyed on *index shapes*, never value-dependent slicing — the
-    eager-op cache stays warm across rounds even though every round
-    selects different cohorts (value-keyed ``l[a:b]`` slicing recompiled a
-    mini-program per new offset pair and dominated sweep wall-clock).
-    """
+def _train_runs_stacked(runs: List[_SweepRun], t: int) -> None:
+    """Phase B for ONE task's runs: one ``cohort_train_multi`` call per
+    (shared client arrays, size bucket) group. Parameter pytrees are only
+    stackable within a task, so the sweep round calls this once per task
+    group; everything else batches across tasks or runs per run."""
+    task = runs[0].task
     lr = runs[0].server.lr
     epochs = runs[0].server.cfg.local_epochs
     batch_size = runs[0].server.batch_size
     assert all(r.server.lr == lr and r.server.batch_size == batch_size
-               for r in runs)
+               and r.task == task for r in runs)
 
-    # -- phase A: schedules — one vmapped call for all runs ------------- #
-    if sweep_ctrl is not None:
-        _schedule_runs_stacked(runs, sweep_ctrl, t)
-    else:
-        for run in runs:
-            run.plan = run.server._schedule_round(t)
-
-    # -- phase B: train — one call per (client arrays, bucket) group ---- #
     # (R, ...) stacked run parameters; each group's per-row params are one
     # shape-stable gather from it
     params_all = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -485,7 +538,7 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
     for i, run in enumerate(runs):
         sel = run.plan[2]
         waste_slots = 0
-        for bkt, pos, rows in run.server._cohort_parts(sel, pad=False):
+        for bkt, pos, rows in run.server._cohort_parts(sel, t, pad=False):
             g = groups.setdefault(id(bkt), {"bkt": bkt, "parts": []})
             g["parts"].append((i, pos, rows))
             # report the same metric the single-run path reports (per-part
@@ -514,10 +567,11 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         p = jax.tree.map(
             lambda l, r=jnp.asarray(np.concatenate(ids_cat)):
                 jnp.take(l, r, axis=0), params_all)
+        data = {f: jnp.take(a, idx, axis=0)
+                for f, a in bkt["data"].items()}
         stacked_g, acc_g = cohort.cohort_train_multi(
-            p, jnp.take(bkt["x"], idx, axis=0),
-            jnp.take(bkt["y"], idx, axis=0),
-            jnp.take(bkt["mask"], idx, axis=0), lr, epochs, batch_size)
+            task, p, data, jnp.take(bkt["mask"], idx, axis=0), lr, epochs,
+            batch_size)
         stacks.append(stacked_g)
         acc_parts.append(acc_g)
         g_off += n_pad
@@ -534,8 +588,37 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         run.stacked, run.acc_local = run.server._apply_attacks(
             run.plan[2], stacked, acc_all[gidx][inv], t)
 
-    # -- phase C: evaluate uploads — one call per seed ------------------ #
-    for group in _by_seed(runs):
+
+def _sweep_round_stacked(runs: List[_SweepRun], t: int,
+                         sweep_ctrl: Optional[ctl.ControlState]
+                         = None) -> None:
+    """One round of every run, batched: one vmapped control-plane call for
+    all runs' schedules (host numpy per run when ``sweep_ctrl`` is None),
+    then — per task — one ``cohort_train_multi`` per (shared client
+    arrays, size bucket) group, one ``cohort_eval`` per (task, seed) for
+    the uploaded models, per-run FedAvg, one ``cohort_eval`` per (task,
+    seed) for the global/watched-unit metrics, and one batched Eq. 1
+    reputation update spanning every task's runs.
+
+    All device-side reshuffling uses gathers (``jnp.take``) whose compile
+    cache is keyed on *index shapes*, never value-dependent slicing — the
+    eager-op cache stays warm across rounds even though every round
+    selects different cohorts (value-keyed ``l[a:b]`` slicing recompiled a
+    mini-program per new offset pair and dominated sweep wall-clock).
+    """
+    # -- phase A: schedules — one vmapped call for all runs ------------- #
+    if sweep_ctrl is not None:
+        _schedule_runs_stacked(runs, sweep_ctrl, t)
+    else:
+        for run in runs:
+            run.plan = run.server._schedule_round(t)
+
+    # -- phase B: train — per task, one call per (arrays, bucket) group - #
+    for group in _by_task(runs):
+        _train_runs_stacked(group, t)
+
+    # -- phase C: evaluate uploads — one call per (task, seed) ---------- #
+    for group in _by_task_seed(runs):
         stacks = [run.stacked for run in group]
         masks = [run.server._eval_masks(run.plan[2], run.plan[2].size)
                  for run in group]
@@ -546,9 +629,9 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
 
     # -- phase C2: defense validation pass — the detector runs' uploads
     # AND their start-of-round global models scored on the held-out split
-    # (per-UE class masks) in one extra vmapped eval per seed, through
-    # the same machinery as phase C
-    for group in _by_seed(runs):
+    # (per-UE unit masks) in one extra vmapped eval per (task, seed),
+    # through the same machinery as phase C
+    for group in _by_task_seed(runs):
         det_runs = [r for r in group
                     if r.server.defense.detector is not None]
         if not det_runs:
@@ -572,14 +655,16 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
                                        cohort.pad_count(sel.size, _PAD))
         run.server._aggregate_cohort(sel, stacked_p)
 
-    # -- phase E: global / source-class / attack-success — one call per
-    # seed. A watched run contributes three rows to the vmapped eval:
-    # full-test accuracy, watched-class accuracy, and the attack success
-    # rate (labels relabelled to the attack's target class over the same
-    # watch mask); a watch-less run contributes only the accuracy row —
-    # no wasted forward passes on rows whose result would be NaN anyway.
-    for group in _by_seed(runs):
-        ty = group[0].server._ty
+    # -- phase E: global / watched-unit / attack-success — one call per
+    # (task, seed). A watched run contributes three rows to the vmapped
+    # eval: full-test unit accuracy, watched-unit accuracy, and the attack
+    # success rate (unit labels relabelled to the attack's target over the
+    # same watch mask); a watch-less run contributes only the accuracy
+    # row — no wasted forward passes on rows whose result would be NaN
+    # anyway. The task's loss metric (LM held-out CE) is one extra scalar
+    # eval per run (free for loss-less tasks).
+    for group in _by_task_seed(runs):
+        ty = group[0].server._ey
         ones = jnp.ones_like(ty, jnp.float32)
         counts = [3 if run.scenario.watch else 1 for run in group]
         stacks = [cohort.broadcast_params(run.server.params, c)
@@ -597,6 +682,7 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
                              ys=ys)
         for run, c, a in zip(group, counts, accs):
             run.g_acc = float(a[0])
+            run.g_loss = run.server._global_loss()
             watched = c == 3 and bool(run.watch_mask.any())
             run.src_acc = float(a[1]) if watched else float("nan")
             run.atk_succ = float(a[2]) if watched else float("nan")
@@ -619,7 +705,8 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         for run in runs:
             values, sched, sel, forced = run.plan
             run.server._log_round(t, values, sched, sel, forced,
-                                  run.g_acc, run.src_acc, run.atk_succ)
+                                  run.g_acc, run.src_acc, run.atk_succ,
+                                  run.g_loss)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
             run.acc_val = None
     else:
@@ -628,37 +715,47 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
             run.server._finalize_round(t, values, sched, sel, forced,
                                        run.acc_local, run.acc_test,
                                        run.g_acc, run.src_acc,
-                                       run.atk_succ, run.acc_val)
+                                       run.atk_succ, run.acc_val,
+                                       run.g_loss)
             run.plan = run.stacked = run.acc_local = run.acc_test = None
             run.acc_val = None
 
 
-def _by_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:
-    groups: Dict[int, List[_SweepRun]] = {}
+def _by_task(runs: List[_SweepRun]) -> List[List[_SweepRun]]:
+    groups: Dict[str, List[_SweepRun]] = {}
     for run in runs:
-        groups.setdefault(run.seed, []).append(run)
+        groups.setdefault(run.task.name, []).append(run)
+    return list(groups.values())
+
+
+def _by_task_seed(runs: List[_SweepRun]) -> List[List[_SweepRun]]:
+    groups: Dict[Tuple[str, int], List[_SweepRun]] = {}
+    for run in runs:
+        groups.setdefault((run.task.name, run.seed), []).append(run)
     return list(groups.values())
 
 
 def _eval_stacked(server, stacks, masks, counts, ys=None) -> List[np.ndarray]:
     """One cohort_eval over the concatenated per-run stacks; split back.
 
-    ``ys`` (optional) — per-run (rows, T) label arrays for metrics that
-    score against relabelled targets (attack success); None keeps the
-    shared test labels for every row."""
+    All stacks must come from runs sharing ``server``'s (task, seed) —
+    the evaluation inputs/targets are the server's. ``ys`` (optional) —
+    per-run (rows, U) unit-label arrays for metrics that score against
+    relabelled targets (attack success); None keeps the shared test
+    targets for every row."""
     n_tot = sum(counts)
     n_pad = cohort.pad_count(n_tot, _PAD)
     stacked = cohort.pad_stacked(cohort.merge_stacks(stacks), n_pad)
     mask = cohort.pad_stacked(cohort.merge_stacks(masks), n_pad)
     if ys is None:
         acc = np.asarray(
-            cohort.cohort_eval(stacked, server._tx, server._ty, mask),
-            float)
+            cohort.cohort_eval(server.task, stacked, server._ex,
+                               server._ey, mask), float)
     else:
         y_rows = cohort.pad_stacked(cohort.merge_stacks(ys), n_pad)
         acc = np.asarray(
-            cohort.cohort_eval_rows(stacked, server._tx, y_rows, mask),
-            float)
+            cohort.cohort_eval_rows(server.task, stacked, server._ex,
+                                    y_rows, mask), float)
     out, off = [], 0
     for c in counts:
         out.append(acc[off:off + c])

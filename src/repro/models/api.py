@@ -33,6 +33,14 @@ def loss(cfg, params, batch, *, remat=False):
     return tf.lm_loss(cfg, params, batch, remat=remat)
 
 
+def loss_masked(cfg, params, batch, *, remat=False):
+    """Masked-batch twin of ``loss`` — the federated cohort contract
+    (batch["m"] {0,1} validity; padded rows contribute exactly zero
+    loss/grad). Decoder-only families only."""
+    assert not _is_encdec(cfg), "masked federated loss: decoder-only models"
+    return tf.lm_loss_masked(cfg, params, batch, remat=remat)
+
+
 def prefill(cfg, params, batch, target_len=None):
     if _is_encdec(cfg):
         return ed.encdec_prefill(cfg, params, batch["src"], batch["tokens"],

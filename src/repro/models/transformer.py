@@ -6,6 +6,7 @@ scanned MoE stack, and the depth-1 multi-token-prediction (MTP) head.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
 import jax
@@ -102,6 +103,98 @@ def lm_loss(cfg, params, batch, *, remat=False):
     loss = loss + aux
     metrics["aux"] = aux
     return loss, metrics
+
+
+# ---------------------------------------------------------------------- #
+# Masked federated twins — the cohort engine's contract (models/mlp.py has
+# the feature-model originals): client datasets are zero-padded to a
+# uniform window count with a {0,1} per-window validity mask; a padded
+# window must contribute *exactly* zero loss and gradient so the padded
+# run reproduces the unpadded one. The window mask expands to per-TOKEN
+# target weights (a target position counts iff both it and its input
+# position are valid), so the same code path supports ragged windows.
+# ---------------------------------------------------------------------- #
+def _token_weights(tokens, m):
+    """(B,) or (B, S) validity mask -> (B, S-1) next-token target weights."""
+    m = jnp.asarray(m, jnp.float32)
+    if m.ndim == 1:
+        m = jnp.broadcast_to(m[:, None], tokens.shape)
+    return m[:, 1:] * m[:, :-1]
+
+
+def lm_loss_masked(cfg, params, batch, *, remat=False):
+    """Masked next-token CE over the valid target positions of a batch.
+
+    batch["tokens"] (B, S) int32; batch["m"] (B,) per-window or (B, S)
+    per-token {0,1} validity. Padded positions carry weight 0: the loss is
+    invariant to their token content and their gradient contribution is
+    exactly zero (a fully padded batch is a strict parameter no-op). For a
+    fully valid batch the masked mean reduces to the plain ``lm_loss``
+    (weight sum == target count). MoE router aux is NOT masked — use
+    aux-free (dense/ssm) configs for the federated task.
+    """
+    tokens = batch["tokens"]
+    logits, aux, _, _ = lm_forward(cfg, params, tokens,
+                                   window=cfg.sliding_window, remat=remat)
+    w = _token_weights(tokens, batch["m"])
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:], mask=w)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def lm_accuracy_masked(cfg, params, tokens, m):
+    """Masked next-token (greedy top-1) accuracy — the LM analogue of the
+    MLP's masked local accuracy (Alg. 1 line 11); 0.0 on an empty mask."""
+    logits, _, _, _ = lm_forward(cfg, params, tokens,
+                                 window=cfg.sliding_window)
+    correct = (jnp.argmax(logits[:, :-1], -1)
+               == tokens[:, 1:]).astype(jnp.float32)
+    w = _token_weights(tokens, m)
+    return jnp.sum(correct * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def lm_sgd_epoch(cfg, params, tokens, lr, batch_size: int = 8):
+    """One epoch of mini-batch SGD over a client's token windows (the
+    federated loop oracle's path; mirrors ``mlp_sgd_epoch`` — a tail batch
+    that does not fill ``batch_size`` is dropped)."""
+    n = tokens.shape[0]
+    nb = max(n // batch_size, 1)
+
+    def body(params, i):
+        tb = jax.lax.dynamic_slice_in_dim(tokens, i * batch_size, batch_size)
+        g = jax.grad(lambda p: lm_loss(cfg, p, {"tokens": tb})[0])(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, 0.0
+
+    params, _ = jax.lax.scan(body, params, jnp.arange(nb))
+    return params
+
+
+@partial(jax.jit, static_argnums=(0, 5))
+def lm_sgd_epoch_masked(cfg, params, tokens, m, lr, batch_size: int = 8):
+    """Masked twin of ``lm_sgd_epoch`` over a padded window set.
+
+    tokens (S, seq), m (S,) with S a multiple of batch_size; batches that
+    fall entirely in the padding leave params untouched. Same row-major
+    reshape batch grid as ``mlp_sgd_epoch_masked``.
+    """
+    n = tokens.shape[0]
+    assert n % batch_size == 0, (
+        f"padded window count {n} must be a multiple of batch_size "
+        f"{batch_size} (pad_clients(multiple_of=batch_size) guarantees this)")
+    nb = n // batch_size
+    tb = tokens.reshape(nb, batch_size, -1)
+    mb = m.reshape(nb, batch_size)
+
+    def body(params, batch):
+        bt, bm = batch
+        g = jax.grad(lambda p: lm_loss_masked(
+            cfg, p, {"tokens": bt, "m": bm})[0])(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, 0.0
+
+    params, _ = jax.lax.scan(body, params, (tb, mb))
+    return params
 
 
 # ---------------------------------------------------------------------- #

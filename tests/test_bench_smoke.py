@@ -1,11 +1,11 @@
 """Tier-1 gate for benchmarks/bench_round.py: the smoke mode runs a tiny
-instance of the engine, sweep, control-plane, threat-model and
-defense-plane benchmarks with loud internal assertions — a bench
+instance of the engine, sweep, control-plane, threat-model, defense-plane
+and LM-task benchmarks with loud internal assertions — a bench
 regression (engine crash, padding-waste regression, sweep/sequential
 divergence, host/batched control-plane selection mismatch,
 masked/per-client attack-application mismatch, host/batched robust
-aggregation mismatch) fails here instead of rotting silently until the
-next manual bench run."""
+aggregation mismatch, LM loop/vectorized loss divergence) fails here
+instead of rotting silently until the next manual bench run."""
 import os
 import subprocess
 import sys
@@ -43,3 +43,8 @@ def test_bench_round_smoke():
     for agg in ("trimmed_mean", "median", "norm_clip", "krum"):
         assert any(line.startswith(f"defense,{agg},") for line in
                    r.stdout.splitlines()), agg
+    # LM task plane: loop + vectorized rows (loss bit-parity asserted in
+    # bench_llm itself; the flash rows are manual-only — interpret mode)
+    for eng in ("loop", "vectorized"):
+        assert any(line.startswith(f"llm,{eng},") for line in
+                   r.stdout.splitlines()), eng

@@ -16,6 +16,7 @@ from repro.data.synthetic_mnist import generate
 from repro.federated import cohort
 from repro.federated.server import FeelServer
 from repro.federated.simulation import run_experiment
+from repro.federated.task import MnistTask
 from repro.models.mlp import (mlp_accuracy, mlp_init, mlp_sgd_epoch,
                               mlp_sgd_epoch_masked)
 
@@ -89,13 +90,14 @@ def test_pad_clients_layout():
 def test_cohort_eval_matches_subset_eval():
     """The vmapped masked test evaluation equals per-model subset scoring."""
     _, test = generate(200, 300, seed=1)
+    task = MnistTask()
     params = [mlp_init(jax.random.PRNGKey(i)) for i in range(3)]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
     masks = np.stack([np.isin(test.y, [0, 1, 2]),
                       np.isin(test.y, [5]),
                       np.ones_like(test.y, bool)]).astype(np.float32)
     got = np.asarray(cohort.cohort_eval(
-        stacked, jnp.asarray(test.x), jnp.asarray(test.y),
+        task, stacked, task.eval_inputs(test), jnp.asarray(test.y),
         jnp.asarray(masks)))
     for i, p in enumerate(params):
         m = masks[i].astype(bool)

@@ -1,0 +1,292 @@
+"""The FeelTask abstraction: LM task wiring, masked-loss contract, stream-v2
+golden regression, token attacks, round-scheduled data attacks (twin-array
+gather), and the mixed-task sweep grid."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FeelConfig
+from repro.core import attacks as atk
+from repro.data.partition import partition
+from repro.data.synthetic_mnist import generate
+from repro.data.tokens import make_stream, make_windows
+from repro.federated.server import build_cohort_data
+from repro.federated.simulation import run_experiment, run_sweep
+from repro.federated.task import LM_TINY, LmTask, MnistTask, as_task
+from repro.models.transformer import (lm_init, lm_loss, lm_loss_masked,
+                                      lm_sgd_epoch, lm_sgd_epoch_masked)
+
+LM_KW = dict(task="lm_tiny", n_train=960, n_test=240, rounds=2)
+
+
+def _curves_equal(a, b, fields=("acc", "loss", "objective",
+                                "attack_success", "malicious_selected")):
+    return all(np.array_equal(np.asarray(a[f], float),
+                              np.asarray(b[f], float), equal_nan=True)
+               for f in fields)
+
+
+# ---------------------------------------------------------------------- #
+# Task registry
+# ---------------------------------------------------------------------- #
+def test_task_registry():
+    assert as_task("mnist_mlp") is as_task("mnist_mlp")   # singleton
+    lm = as_task("lm_tiny")
+    assert isinstance(lm, LmTask) and lm.n_symbols == LM_TINY.vocab_size
+    assert as_task(lm) is lm
+    with pytest.raises(KeyError):
+        as_task("nope")
+    with pytest.raises(TypeError):
+        as_task(7)
+    # frozen dataclasses -> hashable -> usable as jit static args
+    assert hash(as_task("lm_tiny")) == hash(LmTask())
+
+
+# ---------------------------------------------------------------------- #
+# Stream v2 golden regression (satellite: vectorized make_stream).
+# The rewrite re-versioned the per-seed streams intentionally; these
+# anchors pin the NEW streams so future edits can't silently drift them.
+# ---------------------------------------------------------------------- #
+def test_make_stream_v2_golden():
+    s = make_stream(200_000, 64, seed=0)
+    assert s.dtype == np.int32 and s.shape == (200_000,)
+    assert int(s.sum()) == 4073655
+    np.testing.assert_array_equal(
+        s[:10], [54, 17, 22, 49, 17, 2, 2, 0, 7, 1])
+    assert s.min() >= 0 and s.max() < 64
+
+
+def test_make_stream_domain_and_determinism():
+    a = make_stream(5_000, 64, seed=3, domain=1)
+    assert np.array_equal(a, make_stream(5_000, 64, seed=3, domain=1))
+    b = make_stream(5_000, 64, seed=3, domain=2)
+    assert not np.array_equal(a, b)          # domains shift the kernel
+    assert make_stream(0, 64).size == 0
+
+
+def test_make_windows_balanced_and_typed():
+    ds = make_windows(103, 64, seq=32, n_domains=10, seed=0)
+    assert ds.tokens.shape == (103, 32) and ds.tokens.dtype == np.int32
+    assert len(ds) == 103
+    # round-robin interleave: truncation stays domain-balanced within 1
+    counts = np.bincount(ds.y, minlength=10)
+    assert counts.max() - counts.min() <= 1
+    sub = ds.subset(np.arange(7))
+    assert len(sub) == 7 and np.array_equal(sub.y, ds.y[:7])
+
+
+# ---------------------------------------------------------------------- #
+# Masked LM loss contract (satellite: lm_loss masking tests)
+# ---------------------------------------------------------------------- #
+def test_lm_loss_masked_invariant_to_padded_content():
+    params = lm_init(jax.random.PRNGKey(0), LM_TINY)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 64, (8, 32)).astype(np.int32)
+    m = np.array([1, 1, 1, 1, 0, 0, 0, 0], np.float32)
+    scrambled = toks.copy()
+    scrambled[4:] = rng.integers(0, 64, (4, 32))   # junk in padded rows
+
+    l0, _ = lm_loss_masked(LM_TINY, params, {"tokens": jnp.asarray(toks),
+                                             "m": jnp.asarray(m)})
+    l1, _ = lm_loss_masked(LM_TINY, params,
+                           {"tokens": jnp.asarray(scrambled),
+                            "m": jnp.asarray(m)})
+    assert float(l0) == float(l1)
+    # fully valid batch reduces to the plain lm_loss
+    full, _ = lm_loss(LM_TINY, params, {"tokens": jnp.asarray(toks[:4])})
+    ones = jnp.ones(4, jnp.float32)
+    masked, _ = lm_loss_masked(LM_TINY, params,
+                               {"tokens": jnp.asarray(toks[:4]), "m": ones})
+    np.testing.assert_allclose(float(masked), float(full), rtol=1e-6)
+
+
+def test_lm_masked_gradient_zero_for_padded_rows():
+    """Padded rows contribute exactly zero gradient: the masked epoch over
+    a padded window set bit-matches the plain epoch over the real rows."""
+    params = lm_init(jax.random.PRNGKey(1), LM_TINY)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 64, (16, 32)).astype(np.int32)
+    plain = lm_sgd_epoch(LM_TINY, params, jnp.asarray(toks), 0.3, 8)
+
+    padded = np.concatenate([toks, rng.integers(0, 64, (8, 32))]).astype(
+        np.int32)
+    m = np.concatenate([np.ones(16), np.zeros(8)]).astype(np.float32)
+    masked = lm_sgd_epoch_masked(LM_TINY, params, jnp.asarray(padded),
+                                 jnp.asarray(m), 0.3, 8)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(masked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # an all-padded batch is a strict parameter no-op
+    g = jax.grad(lambda p: lm_loss_masked(
+        LM_TINY, p, {"tokens": jnp.asarray(toks[:8]),
+                     "m": jnp.zeros(8, jnp.float32)})[0])(params)
+    assert all(not np.asarray(l).any() for l in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------- #
+# LM cohort engine parity (satellite: K=8 loop vs vectorized)
+# ---------------------------------------------------------------------- #
+def test_lm_cohort_loop_vs_vectorized_k8():
+    """The loop engine is the LM parity oracle too: a K=8 federated LM
+    fine-tuning run is BIT-identical across engines."""
+    cfg = FeelConfig(n_ues=8, n_malicious=2)
+    a = run_experiment("dqs", cfg=cfg, seed=0, scenario="token_flip_1to5",
+                       engine="loop", control="host", **LM_KW)
+    b = run_experiment("dqs", cfg=cfg, seed=0, scenario="token_flip_1to5",
+                       engine="vectorized", control="host", **LM_KW)
+    assert _curves_equal(a, b)
+    assert np.isfinite(a["loss"]).all()      # LM defines the loss metric
+
+
+# ---------------------------------------------------------------------- #
+# Token-space data attacks
+# ---------------------------------------------------------------------- #
+def test_token_flip_rewrites_source_tokens_only():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 64, (20, 32)).astype(np.int32)
+    out = atk.TokenFlip(((1, 5),)).poison_tokens(toks, rng)
+    assert out.shape == toks.shape and out.dtype == toks.dtype
+    assert not (out == 1).any()                       # every source rewritten
+    np.testing.assert_array_equal(out[toks != 1], toks[toks != 1])
+    assert (out[toks == 1] == 5).all()
+    # pairs resolve on the ORIGINAL tokens: (1->5, 5->9) never cascades
+    chained = atk.TokenFlip(((1, 5), (5, 9))).poison_tokens(toks, rng)
+    assert (chained[toks == 1] == 5).all()
+    assert (chained[toks == 5] == 9).all()
+
+
+def test_token_flip_fraction_subsamples():
+    rng = np.random.default_rng(0)
+    toks = np.full((10, 32), 1, np.int32)
+    out = atk.TokenFlip(((1, 5),), flip_fraction=0.25).poison_tokens(
+        toks, np.random.default_rng(1))
+    flipped = int((out == 5).sum())
+    assert flipped == int(round(0.25 * toks.size))
+
+
+def test_token_attack_needs_token_dataset():
+    cfg = FeelConfig(n_ues=4, n_malicious=1)
+    with pytest.raises(AssertionError, match="token-space attack"):
+        run_experiment("dqs", cfg=cfg, seed=0, rounds=1, task="mnist_mlp",
+                       scenario="token_flip_1to5", n_train=800, n_test=200)
+
+
+def test_token_noise_rate():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 64, (200, 32)).astype(np.int32)
+    out = atk.TokenNoise(0.3, 64).poison_tokens(toks,
+                                                np.random.default_rng(2))
+    changed = (out != toks).mean()
+    # ~rate of positions redrawn (binomial noise, and a redraw can land on
+    # the original token): the changed-rate concentrates just under 0.3
+    assert 0.15 < changed < 0.35
+
+
+# ---------------------------------------------------------------------- #
+# Round-scheduled data attacks: twin-array gather (carry-over satellite)
+# ---------------------------------------------------------------------- #
+def test_intermittent_data_attack_engine_parity():
+    """A round-scheduled label-flip (previously REJECTED at construction)
+    runs, and the vectorized twin-row gather matches the loop oracle's
+    per-round data substitution bit for bit."""
+    cfg = FeelConfig(n_ues=10, n_malicious=2)
+    kw = dict(cfg=cfg, seed=0, scenario="flip_6to2_int2", n_train=2000,
+              n_test=400, rounds=4)
+    a = run_experiment("dqs", engine="loop", control="host", **kw)
+    b = run_experiment("dqs", engine="vectorized", control="host", **kw)
+    # MNIST engine parity is approximate by contract (the loop oracle
+    # evaluates label SUBSETS, the vectorized engine masked full-test
+    # passes — see test_cohort.py); the LM task's parity is bit-exact
+    assert b["malicious_selected"] == a["malicious_selected"]
+    for f in ("acc", "source_acc", "attack_success", "objective"):
+        np.testing.assert_allclose(b[f], a[f], atol=1e-5)
+
+
+def test_intermittent_period1_equals_always_on():
+    """duty-cycle period 1 == always active: the scheduled scenario must
+    reproduce the plain label flip exactly (the twin mapping degenerates
+    to the identity)."""
+    cfg = FeelConfig(n_ues=10, n_malicious=2)
+    kw = dict(cfg=cfg, seed=0, n_train=2000, n_test=400, rounds=3)
+    always = run_experiment("dqs", scenario="flip_6to2", **kw)
+    int1 = run_experiment("dqs", scenario=atk.intermittent(
+        atk.label_flip(6, 2), period=1), **kw)
+    assert _curves_equal(always, int1, fields=("acc", "source_acc",
+                                               "attack_success",
+                                               "objective"))
+
+
+def test_cohort_data_twin_layout():
+    """CohortData buckets lay rows out [real | clean twins | null]:
+    malicious clients (which carry a ``clean`` pre-poison copy) get a twin
+    row holding the CLEAN data, mapped via ``clean_row_of``."""
+    train, test = generate(2000, 200, seed=0)
+    rng = np.random.default_rng(0)
+    mal = np.array([1, 3])
+    clients = partition(train, 6, rng, mal, atk.LabelFlip(((6, 2),)))
+    task = MnistTask()
+    masks = np.ones((6, len(test.y)), np.float32)
+    cd = build_cohort_data(clients, masks, batch_size=50)
+    for k in range(6):
+        if k in mal:
+            assert clients[k].clean is not None
+            tw = int(cd.clean_row_of[k])
+            assert tw >= 0
+            b = cd.buckets[cd.bucket_of[k]]
+            tw_local = tw  # row ids are bucket-local in single-bucket runs
+            n = clients[k].size
+            got = np.asarray(b["data"]["y"][tw_local][:n])
+            np.testing.assert_array_equal(got, clients[k].clean.y)
+            assert (np.asarray(b["data"]["y"][cd.row_of[k]][:n])
+                    == clients[k].data.y).all()
+        else:
+            assert clients[k].clean is None
+            assert cd.clean_row_of[k] == -1
+
+
+# ---------------------------------------------------------------------- #
+# The model as a sweep axis (tentpole acceptance)
+# ---------------------------------------------------------------------- #
+def test_mixed_task_sweep_grid():
+    """ONE run_sweep invocation executes a (task x scenario x policy x
+    seed) grid containing BOTH tasks, and every run matches its
+    sequential ``run_experiment`` twin."""
+    cfg = FeelConfig(n_ues=8, n_malicious=2)
+    res = run_sweep(["dqs", "random"], seeds=[0],
+                    tasks=["mnist_mlp", "lm_tiny"],
+                    scenarios=["none", "sign_flip"],
+                    cfg=cfg, n_train=960, n_test=240, rounds=2)
+    assert {r["task"] for r in res.runs} == {"mnist_mlp", "lm_tiny"}
+    assert len(res.runs) == 2 * 2 * 2
+    # loss curves: finite for the LM task, NaN for the MLP task
+    for r in res.runs:
+        fin = np.isfinite(r["loss"])
+        assert fin.all() if r["task"] == "lm_tiny" else not fin.any()
+    for r in res.runs:
+        twin = run_experiment(r["policy"], cfg=cfg, seed=r["seed"],
+                              task=r["task"], scenario=r["scenario"],
+                              n_train=960, n_test=240, rounds=2)
+        for f in ("acc", "loss", "objective", "malicious_selected"):
+            a, b = np.asarray(r[f], float), np.asarray(twin[f], float)
+            nan = np.isnan(a)
+            assert np.array_equal(nan, np.isnan(b))
+            np.testing.assert_allclose(np.where(nan, 0, a),
+                                       np.where(nan, 0, b), atol=1e-7)
+    # the tidy table slices per task
+    curve = res.mean_curve("loss", task="lm_tiny", policy="dqs",
+                           scenario="none")
+    assert np.isfinite(curve).all() and curve.shape == (2,)
+
+
+def test_run_experiment_task_defaults():
+    """n_train/n_test default per task; an unknown task name fails loudly
+    before any work happens."""
+    cfg = FeelConfig(n_ues=4, n_malicious=0)
+    r = run_experiment("random", cfg=cfg, seed=0, rounds=1, task="lm_tiny",
+                       n_train=320, n_test=80, scenario="none")
+    assert r["task"] == "lm_tiny" and len(r["acc"]) == 1
+    with pytest.raises(KeyError, match="unknown task"):
+        run_experiment("dqs", cfg=dataclasses.replace(cfg, task="nope"),
+                       seed=0, rounds=1)
