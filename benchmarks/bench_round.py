@@ -296,7 +296,7 @@ if mode == "apply":
     def oracle(mal):
         out = stacked
         for i in np.flatnonzero(mal):
-            poisoned = attack.apply_host(
+            poisoned = attack.apply_loop(
                 params, jax.tree.map(lambda l, i=int(i): l[i], out))
             out = jax.tree.map(lambda l, p, i=int(i): l.at[i].set(p),
                                out, poisoned)

@@ -1,0 +1,82 @@
+"""repro.check — the static contract checker (DESIGN.md §11).
+
+Run as ``python -m repro.check [--strict] [--json]`` (or the
+``repro-check`` console script). Gated in tier-1 by
+``tests/test_check.py``: the suite fails if any checker reports a
+violation on the repo.
+
+What is enforced (and why) lives in the rule modules' docstrings:
+
+- ``lints``     — AST lints: oracle purity, tracer leaks,
+                  nondeterminism, dtype discipline;
+- ``registry``  — registry–test cross-referencing + kernel ``_ref``
+                  twins;
+- ``trace``     — abstract-trace (jaxpr) dtype pinning + static-arg
+                  hashability;
+- ``inventory`` — dead-inheritance report (informational, never fails).
+
+Intentional exceptions are waived per line with
+``# repro: allow(rule-name)`` (see ``common.parse_waivers``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable, Dict, List
+
+from repro.check.common import (CheckContext, SourceFile, Violation,
+                                make_context)
+from repro.check.inventory import build_inventory
+from repro.check.lints import (check_dtype, check_nondeterminism,
+                               check_oracle_purity, check_tracer_leak)
+from repro.check.registry import check_kernel_twins, check_registries
+from repro.check.trace import check_static_args, check_traces
+
+# ordered: cheap AST passes first, import-the-world trace checks last
+CHECKERS: Dict[str, Callable[[CheckContext], List[Violation]]] = {
+    "oracle-purity": check_oracle_purity,
+    "tracer-leak": check_tracer_leak,
+    "nondeterminism": check_nondeterminism,
+    "dtype": check_dtype,
+    "registry-coverage": check_registries,
+    "kernel-ref-twin": check_kernel_twins,
+    "static-args": check_static_args,
+    "trace": check_traces,
+}
+
+
+@dataclasses.dataclass
+class CheckReport:
+    violations: List[Violation]
+    inventory: Dict
+    per_checker: Dict[str, int]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def repo_root() -> Path:
+    """The repo root: three parents up from this package
+    (src/repro/check -> repo)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def run_checks(root: Path = None, skip_trace: bool = False) -> CheckReport:
+    """Run every checker over ``root`` (default: this repo)."""
+    ctx = make_context(root or repo_root())
+    violations: List[Violation] = []
+    per: Dict[str, int] = {}
+    for name, chk in CHECKERS.items():
+        if skip_trace and name == "trace":
+            per[name] = -1
+            continue
+        vs = chk(ctx)
+        per[name] = len(vs)
+        violations.extend(vs)
+    return CheckReport(violations=violations,
+                       inventory=build_inventory(ctx), per_checker=per)
+
+
+__all__ = ["CHECKERS", "CheckReport", "CheckContext", "SourceFile",
+           "Violation", "make_context", "repo_root", "run_checks"]

@@ -1,0 +1,102 @@
+"""CLI: ``python -m repro.check [--strict] [--json] [--out PATH]``.
+
+Prints every violation as ``path:line: [rule] message`` plus the
+dead-inheritance inventory summary. ``--strict`` exits non-zero on any
+violation (the tier-1 gate and CI mode); without it the run is a
+report. ``--json`` additionally writes ``results/check_report.json``
+keyed by commit, the same meta schema as the BENCH_* writers
+(benchmarks/bench_round.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import datetime
+import json
+import os
+import platform
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.check import repo_root, run_checks
+
+
+def _meta():
+    """Commit/env metadata — mirrors benchmarks/bench_round._bench_meta."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=str(repo_root())).stdout.strip() or "unknown"
+    except OSError:
+        commit = "unknown"
+
+    def ver(pkg):
+        try:
+            import importlib.metadata
+            return importlib.metadata.version(pkg)
+        except Exception:                           # noqa: BLE001
+            return "unknown"
+
+    return {"commit": commit, "python": platform.python_version(),
+            "jax": ver("jax"), "numpy": ver("numpy"),
+            "timestamp": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds")}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-check",
+        description="Static contract checker (DESIGN.md §11)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any violation (tier-1 / CI mode)")
+    ap.add_argument("--json", action="store_true", dest="json_out",
+                    help="write the report to results/check_report.json")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="override the --json report path")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root to check (default: this repo)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the (slower) abstract-trace checks")
+    args = ap.parse_args(argv)
+
+    report = run_checks(args.root, skip_trace=args.no_trace)
+
+    for v in report.violations:
+        print(v.format())
+    inv = report.inventory
+    print(f"\ncheckers: " + ", ".join(
+        f"{k}={'skipped' if n < 0 else n}"
+        for k, n in report.per_checker.items()))
+    print(f"dead-inheritance: {inv['n_dead']}/{inv['n_modules']} modules "
+          f"unreachable from tests/examples/benchmarks "
+          f"({inv['dead_loc']} LoC): " + ", ".join(
+              f"{pkg}={loc}" for pkg, loc in
+              inv["dead_by_package"].items()))
+
+    if args.json_out or args.out:
+        out = args.out or (repo_root() / "results" / "check_report.json")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "check": "contracts",
+            "meta": _meta(),
+            "ok": report.ok,
+            "per_checker": report.per_checker,
+            "violations": [dataclasses.asdict(v)
+                           for v in report.violations],
+            "inventory": {k: inv[k] for k in
+                          ("n_modules", "n_live", "n_dead", "dead_loc",
+                           "dead_by_package", "dead")},
+        }
+        out.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {os.path.relpath(out)}")
+
+    if report.ok:
+        print("contracts: clean")
+        return 0
+    print(f"contracts: {len(report.violations)} violation(s)")
+    return 1 if args.strict else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,104 @@
+"""Dead-inheritance inventory (DESIGN.md §11d) — report, not a gate.
+
+The seed shipped a big-model serving stack (sharding/, launch/, the
+MoE/SSM/MLA/encdec zoo, 11 big-model configs) most of which the FEEL
+reproduction does not reach yet. ROADMAP.md makes claims about which of
+it is still untouched; this inventory keeps those claims honest by
+computing actual reachability: build the ``repro.*`` import graph,
+take every module imported (transitively) from tests/, examples/ and
+benchmarks/ as live, and report the rest with line counts.
+
+Dead modules are NOT violations — several are named targets of open
+ROADMAP items (e.g. sharding/ for the million-UE control plane). The
+report exists so growth is a decision, not an accident.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set
+
+from repro.check.common import CheckContext
+
+
+def _module_name(rel: str) -> str:
+    """'src/repro/core/attacks.py' -> 'repro.core.attacks'."""
+    parts = Path(rel).with_suffix("").parts
+    parts = parts[parts.index("repro"):]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports_of(tree: ast.Module, known: Set[str]) -> Set[str]:
+    """repro.* modules referenced by a module's import statements."""
+    out: Set[str] = set()
+
+    def add(name: str) -> None:
+        if name in known:
+            out.add(name)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                add(a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.split(".")[0] == "repro":
+            add(node.module)
+            for a in node.names:
+                add(f"{node.module}.{a.name}")
+    return out
+
+
+def build_inventory(ctx: CheckContext) -> Dict:
+    modules: Dict[str, object] = {}      # module -> SourceFile
+    for src in ctx.sources:
+        modules[_module_name(src.rel)] = src
+    known = set(modules)
+
+    graph = {m: _imports_of(src.tree, known)
+             for m, src in modules.items()}
+    # a submodule implicitly keeps its package __init__ alive
+    for m in list(graph):
+        parts = m.split(".")
+        for i in range(1, len(parts)):
+            pkg = ".".join(parts[:i])
+            if pkg in known:
+                graph[m].add(pkg)
+
+    roots: Set[str] = set()
+    for d in ("tests", "examples", "benchmarks"):
+        base = ctx.repo_root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            try:
+                tree = ast.parse(p.read_text())
+            except SyntaxError:
+                continue
+            roots |= _imports_of(tree, known)
+
+    live: Set[str] = set()
+    frontier = list(roots)
+    while frontier:
+        m = frontier.pop()
+        if m in live:
+            continue
+        live.add(m)
+        frontier.extend(graph.get(m, ()))
+
+    dead = sorted(known - live)
+    records: List[Dict] = []
+    for m in dead:
+        src = modules[m]
+        records.append({"module": m, "path": src.rel,
+                        "loc": src.text.count("\n") + 1})
+    total = sum(r["loc"] for r in records)
+    by_pkg: Dict[str, int] = {}
+    for r in records:
+        pkg = r["module"].split(".")[1] if "." in r["module"] else "."
+        by_pkg[pkg] = by_pkg.get(pkg, 0) + r["loc"]
+    return {"n_modules": len(known), "n_live": len(live & known),
+            "n_dead": len(dead), "dead_loc": total,
+            "dead_by_package": dict(sorted(by_pkg.items())),
+            "dead": records}

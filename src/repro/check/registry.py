@@ -1,0 +1,157 @@
+"""Registry–test cross-referencing (DESIGN.md §11b).
+
+Every entry of a behaviour registry (attack SCENARIOS, DEFENSES, TASKS,
+scheduler POLICY_IDS) must be exercised by the parity matrix tests, and
+every public Pallas kernel wrapper must ship a ``*_ref`` oracle twin
+plus a test. Coverage is established by *test AST evidence*, not by
+running the tests:
+
+- a ``pytest.mark.parametrize`` whose argvalues expression mentions the
+  registry symbol itself (e.g. ``sorted(atk.SCENARIOS)``) covers every
+  entry by construction — the matrix can never lag the registry;
+- otherwise each entry name must appear as a string literal somewhere
+  in the designated test module.
+
+The checkers import the live registries, so registering a new scenario
+/ defense / task / policy without matrix coverage fails tier-1 at
+``tests/test_check.py`` — before any parity test would have had a
+chance to miss it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Sequence
+
+from repro.check.common import (CheckContext, Violation, dotted_name)
+
+
+def _string_literals(tree: ast.AST) -> set:
+    return {n.value for n in ast.walk(tree)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def _parametrizes_over(tree: ast.AST, symbol: str) -> bool:
+    """True if some ``parametrize(...)`` call's argument expression
+    references ``symbol`` (as a bare name or attribute tail)."""
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and (dotted_name(node.func) or "").endswith("parametrize")):
+            continue
+        for arg in list(node.args) + [k.value for k in node.keywords]:
+            for sub in ast.walk(arg):
+                name = dotted_name(sub)
+                if name and name.split(".")[-1] == symbol:
+                    return True
+    return False
+
+
+def registry_coverage(entries: Iterable[str], symbol: str,
+                      test_tree: ast.AST, test_rel: str,
+                      extra_trees: Sequence[ast.AST] = ()
+                      ) -> List[Violation]:
+    """Violations for registry entries with no test evidence.
+
+    ``entries`` — the live registry's keys; ``symbol`` — the registry's
+    attribute name (``SCENARIOS``, ``DEFENSES``, ...); ``test_tree`` —
+    the designated matrix test module's AST; ``extra_trees`` — further
+    modules whose string literals also count as evidence.
+    """
+    trees = [test_tree, *extra_trees]
+    if any(_parametrizes_over(t, symbol) for t in trees):
+        return []
+    literals = set()
+    for t in trees:
+        literals |= _string_literals(t)
+    return [Violation(
+        rule="registry-coverage", path=test_rel, line=1,
+        message=f"registry entry `{name}` of `{symbol}` has no "
+                f"coverage in {test_rel} — parametrize the matrix over "
+                f"the registry (e.g. `sorted({symbol})`) or reference "
+                "the entry explicitly")
+        for name in sorted(entries) if name not in literals]
+
+
+def kernel_ref_twins(kernels: Iterable[str], ref_module,
+                     test_tree: Optional[ast.AST], test_rel: str
+                     ) -> List[Violation]:
+    """Every public kernel wrapper needs a ``<name>_ref`` oracle in
+    ``kernels/ref.py`` and a reference to BOTH names in the kernel test
+    module."""
+    out: List[Violation] = []
+    names_in_test = set()
+    if test_tree is not None:
+        for node in ast.walk(test_tree):
+            name = dotted_name(node)
+            if name:
+                names_in_test.add(name.split(".")[-1])
+        names_in_test |= _string_literals(test_tree)
+    for k in sorted(kernels):
+        twin = f"{k}_ref"
+        if not hasattr(ref_module, twin):
+            out.append(Violation(
+                rule="kernel-ref-twin", path="src/repro/kernels/ref.py",
+                line=1,
+                message=f"kernel `{k}` has no `{twin}` oracle twin in "
+                        "kernels/ref.py — every Pallas kernel ships a "
+                        "pure-jnp reference"))
+            continue
+        if test_tree is not None and not (
+                k in names_in_test and twin in names_in_test):
+            missing = [n for n in (k, twin) if n not in names_in_test]
+            out.append(Violation(
+                rule="kernel-ref-twin", path=test_rel, line=1,
+                message=f"kernel `{k}`: {', '.join(missing)} never "
+                        f"referenced in {test_rel} — the kernel/ref "
+                        "pair must be pinned by a parity test"))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# repo wiring
+# --------------------------------------------------------------------- #
+def _test_tree(ctx: CheckContext, name: str):
+    path = ctx.tests_root / name
+    if not path.exists():
+        return None
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def check_registries(ctx: CheckContext) -> List[Violation]:
+    from repro.core import attacks as atk
+    from repro.core import defenses as dfs
+    from repro.core.scheduler import POLICY_IDS
+    from repro.federated.task import TASKS
+
+    out: List[Violation] = []
+    specs = [
+        (atk.SCENARIOS, "SCENARIOS", "test_attacks.py", ()),
+        (dfs.DEFENSES, "DEFENSES", "test_defenses.py", ()),
+        (TASKS, "TASKS", "test_task_lm.py", ()),
+        # policies have no single matrix file; any sweep/control test
+        # referencing the name (or a parametrize over POLICY_IDS) counts
+        (POLICY_IDS, "POLICY_IDS", "test_scheduler.py",
+         ("test_sweep.py", "test_control.py", "test_simulation.py")),
+    ]
+    for entries, symbol, test_name, extra in specs:
+        tree = _test_tree(ctx, test_name)
+        if tree is None:
+            out.append(Violation(
+                rule="registry-coverage", path=f"tests/{test_name}",
+                line=1,
+                message=f"matrix test module for `{symbol}` not found"))
+            continue
+        extra_trees = [t for t in (_test_tree(ctx, e) for e in extra)
+                       if t is not None]
+        out.extend(registry_coverage(entries, symbol, tree,
+                                     f"tests/{test_name}", extra_trees))
+    return out
+
+
+def check_kernel_twins(ctx: CheckContext) -> List[Violation]:
+    from repro.kernels import ops, ref
+
+    kernels = [n for n in ops.__all__
+               if n not in ("use_pallas", "ref")]
+    return kernel_ref_twins(kernels, ref,
+                            _test_tree(ctx, "test_kernels.py"),
+                            "tests/test_kernels.py")

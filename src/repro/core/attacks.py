@@ -231,21 +231,29 @@ class TokenNoise:
 DataAttack = Union[LabelFlip, FeatureNoise, TokenFlip, TokenNoise]
 
 
-def poison_dataset(attack, ds, rng: np.random.Generator):
+def poison_dataset(attack, ds, rng: np.random.Generator,
+                   context: str = ""):
     """Dataset-dispatching poison entry point (used by
     ``data.partition.partition``): token-space attacks rewrite a
     ``TokenDataset``'s windows, feature/label attacks rewrite a
     ``Dataset``'s ``(x, y)`` — a mismatched (attack, dataset) pairing
-    fails loudly instead of silently no-opping."""
+    fails loudly instead of silently no-opping.
+
+    ``context`` names the offending (task, scenario) pairing in the
+    failure message — a sweep crossing every scenario with every task
+    hits the mismatch far from where it was configured, and "got
+    Dataset" alone does not say which sweep cell to fix.
+    """
+    where = f" [{context}]" if context else ""
     if hasattr(attack, "poison_tokens"):
         assert hasattr(ds, "tokens"), (
             f"{type(attack).__name__} is a token-space attack and needs a "
-            f"token dataset, got {type(ds).__name__} (use LabelFlip/"
+            f"token dataset, got {type(ds).__name__}{where} (use LabelFlip/"
             "FeatureNoise for feature/label data)")
         return type(ds)(attack.poison_tokens(ds.tokens, rng), ds.y.copy())
     assert hasattr(ds, "x"), (
         f"{type(attack).__name__} poisons (x, y) arrays and needs a "
-        f"feature dataset, got {type(ds).__name__} (use TokenFlip/"
+        f"feature dataset, got {type(ds).__name__}{where} (use TokenFlip/"
         "TokenNoise for token data)")
     return type(ds)(*attack.poison(ds.x, ds.y, rng))
 
@@ -268,8 +276,12 @@ class ModelAttack:
     scale: float = -1.0
     staleness: int = 0
 
-    def apply_host(self, global_params, local_params, ref_params=None):
-        """Per-client oracle (the loop engine's path)."""
+    def apply_loop(self, global_params, local_params, ref_params=None):
+        """Per-client sequential twin (the loop engine's path).
+
+        Operates on device parameter pytrees — deliberately NOT named
+        ``*_host``/``*_oracle``: the host-purity contract (DESIGN.md
+        §11) reserves those suffixes for numpy-only code."""
         ref = global_params if ref_params is None else ref_params
         return jax.tree.map(
             lambda r, g, l: r + self.scale * (l - g),

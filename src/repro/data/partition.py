@@ -51,7 +51,8 @@ def partition(train, n_ues: int, rng: np.random.Generator,
               malicious: Optional[np.ndarray] = None,
               attack=None, group_size: int = GROUP_SIZE,
               min_groups: int = MIN_GROUPS,
-              max_groups: int = MAX_GROUPS) -> List[ClientData]:
+              max_groups: int = MAX_GROUPS,
+              context: str = "") -> List[ClientData]:
     """Allocate label-sorted sample groups to K UEs (module docstring).
 
     ``attack`` poisons each malicious UE's raw data: either a
@@ -85,7 +86,7 @@ def partition(train, n_ues: int, rng: np.random.Generator,
             clean = ds
             if hasattr(attack, "poison") or hasattr(attack, "poison_tokens"):
                 from repro.core.attacks import poison_dataset
-                ds = poison_dataset(attack, ds, rng)
+                ds = poison_dataset(attack, ds, rng, context=context)
             else:                               # legacy label-only attack
                 ds = type(ds)(ds.x, attack.apply(ds.y, rng))
         clients.append(ClientData(ue_id=k, data=ds, malicious=is_mal,

@@ -37,7 +37,7 @@ Threat model: the server takes an ``core.attacks.AttackScenario``; its
 model/report components apply to the merged cohort stack through ONE
 masked ``tree_map`` (``_apply_attacks``) on the scenario's activity
 schedule — the pre-refactor per-malicious-client dispatch loop survives
-as ``_apply_attacks_oracle``, pinned bit-equal (DESIGN.md §8).
+as ``_apply_attacks_loop``, pinned bit-equal (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -401,7 +401,7 @@ class FeelServer:
         ref = self._attack_ref_params()
         mal = active[sel]
         if scn.model is not None:
-            params_list = [scn.model.apply_host(self.params, p, ref)
+            params_list = [scn.model.apply_loop(self.params, p, ref)
                            if m else p for p, m in zip(params_list, mal)]
         if scn.report is not None:
             acc_local = scn.report.apply(acc_local, mal)
@@ -411,7 +411,7 @@ class FeelServer:
         # __init__ note)
         acc_test = np.empty(len(reports))
         for i, (p, k) in enumerate(zip(params_list, sel)):
-            acc_test[i] = self.task.eval_units_host(p, self.test,
+            acc_test[i] = self.task.eval_units_loop(p, self.test,
                                                     self._test_masks[k])
 
         # defense plane, host-oracle side: per-client validation pass
@@ -423,9 +423,9 @@ class FeelServer:
             for i, (p, k) in enumerate(zip(params_list, sel)):
                 m = self._val_masks[k]
                 if m.any():
-                    acc_val[0, i] = self.task.eval_units_host(
+                    acc_val[0, i] = self.task.eval_units_loop(
                         p, self.test, m)
-                    acc_val[1, i] = self.task.eval_units_host(
+                    acc_val[1, i] = self.task.eval_units_loop(
                         self.params, self.test, m)
         agg = self.defense.aggregator
         weights = [r.n_samples for r in reports]
@@ -522,7 +522,7 @@ class FeelServer:
         """Model poisoning + dishonest reporting on the merged stack:
         ONE masked ``tree_map`` over the malicious rows
         (``ModelAttack.apply_stacked``) — no per-malicious-client
-        dispatch. ``_apply_attacks_oracle`` keeps the replaced per-client
+        dispatch. ``_apply_attacks_loop`` keeps the replaced per-client
         ``.at[i].set`` loop as the parity oracle (tests/test_attacks.py
         pins them bit-for-bit equal)."""
         scn = self.scenario
@@ -535,7 +535,7 @@ class FeelServer:
             acc_local = scn.report.apply(acc_local, mal)
         return stacked, acc_local
 
-    def _apply_attacks_oracle(self, sel, stacked, acc_local, t):
+    def _apply_attacks_loop(self, sel, stacked, acc_local, t):
         """The pre-refactor O(n_malicious) dispatch loop — one
         ``.at[i].set`` tree_map per malicious client. Kept ONLY as the
         parity oracle for ``_apply_attacks``."""
@@ -544,7 +544,7 @@ class FeelServer:
         mal = self._active_malicious(sel, t)
         if scn.model is not None and mal.any():
             for i in np.flatnonzero(mal):
-                poisoned = scn.model.apply_host(
+                poisoned = scn.model.apply_loop(
                     self.params, cohort.unstack(stacked, int(i)), ref)
                 stacked = jax.tree.map(
                     lambda l, p, i=int(i): l.at[i].set(p), stacked, poisoned)

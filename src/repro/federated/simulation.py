@@ -129,7 +129,9 @@ def run_experiment(policy: str = "dqs",
     malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
     clients = tsk.partition_clients(train, cfg.n_ues, rng,
                                     None if scn.benign else malicious,
-                                    scn.data)
+                                    scn.data,
+                                    context=f"task={tsk.name}, "
+                                            f"scenario={scn.name}")
     server = FeelServer(cfg, clients, test, rng, policy=policy,
                         adaptive_omega=adaptive_omega, scenario=scn,
                         engine=engine, control=control, defense=defense,
@@ -401,7 +403,8 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                 malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
                 clients = tsk.partition_clients(
                     train, cfg.n_ues, rng,
-                    None if scn.benign else malicious, scn.data)
+                    None if scn.benign else malicious, scn.data,
+                    context=f"task={tsk.name}, scenario={scn.name}")
                 # freeze the post-partition RNG state: each run restores it
                 # so its downstream stream (wireless placement, channel
                 # draws) matches its sequential run_experiment twin exactly

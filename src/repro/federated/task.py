@@ -30,7 +30,7 @@ and ANY pytree model:
         the LM — the exact analogue of the MNIST definition. Masked unit
         accuracies are sums of {0,1} float32 counts (< 2^24), so subset
         and masked-full evaluations agree bit-for-bit.
-    loop oracle — local_train / eval_units_host / global_metrics: the
+    loop oracle — local_train / eval_units_loop / global_metrics: the
         sequential host paths (``engine="loop"``, ``control="host"``)
         each task keeps as its parity oracle; the MNIST task delegates to
         the exact pre-refactor code (``federated.client.local_train``,
@@ -85,7 +85,7 @@ class FeelTask:
     Eval units:       unit_labels, unit_rows, eval_inputs, unit_targets.
     Device plane:     init_params, sgd_epoch, local_metric, predict_units,
                       eval_loss (None when the task has no loss metric).
-    Loop oracle:      local_train, eval_units_host, global_metrics.
+    Loop oracle:      local_train, eval_units_loop, global_metrics.
     Protocol knobs:   group_size/min_groups/max_groups (partition),
                       batch_size, default_lr, default_n_train/_n_test.
     """
@@ -117,11 +117,12 @@ class MnistTask(FeelTask):
         return generate(n_train, n_test, seed=seed)
 
     def partition_clients(self, train, n_ues, rng, malicious=None,
-                          attack=None):
+                          attack=None, context=""):
         return partition(train, n_ues, rng, malicious, attack,
                          group_size=self.group_size,
                          min_groups=self.min_groups,
-                         max_groups=self.max_groups)
+                         max_groups=self.max_groups,
+                         context=context or f"task={self.name}")
 
     def histogram(self, data) -> np.ndarray:
         """What a UE reports: its label histogram (claimed class support)."""
@@ -167,7 +168,7 @@ class MnistTask(FeelTask):
         return local_train(client, global_params, epochs, lr,
                            batch_size=batch_size)
 
-    def eval_units_host(self, params, test, m: np.ndarray) -> float:
+    def eval_units_loop(self, params, test, m: np.ndarray) -> float:
         if not m.any():
             return 0.0
         return float(mlp_accuracy(params, jnp.asarray(test.x[m]),
@@ -246,11 +247,12 @@ class LmTask(FeelTask):
         return ds.subset(idx[:n_train]), ds.subset(idx[n_train:])
 
     def partition_clients(self, train, n_ues, rng, malicious=None,
-                          attack=None):
+                          attack=None, context=""):
         return partition(train, n_ues, rng, malicious, attack,
                          group_size=self.group_size,
                          min_groups=self.min_groups,
-                         max_groups=self.max_groups)
+                         max_groups=self.max_groups,
+                         context=context or f"task={self.name}")
 
     def histogram(self, data) -> np.ndarray:
         """What a UE reports: its token histogram (claimed vocab support)."""
@@ -309,7 +311,7 @@ class LmTask(FeelTask):
         return ClientReport(ue_id=client.ue_id, params=params,
                             acc_local=acc, n_samples=client.size)
 
-    def eval_units_host(self, params, test, m: np.ndarray) -> float:
+    def eval_units_loop(self, params, test, m: np.ndarray) -> float:
         if not m.any():
             return 0.0
         pred = np.asarray(_lm_predict(self.model, params,

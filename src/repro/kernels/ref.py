@@ -61,6 +61,11 @@ def ssd_ref(x, dt, A, B_, C_):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
 
 
+# public-wrapper naming convention (repro.check kernel-ref-twin rule):
+# every ops.<kernel> has a <kernel>_ref twin; ssd_ref predates the rule
+ssd_scan_ref = ssd_ref
+
+
 def moe_gemm_ref(buf, w):
     """(E,C,d) x (E,d,f) -> (E,C,f)."""
     return jnp.einsum("ecd,edf->ecf", buf, w)
@@ -71,6 +76,16 @@ def weighted_aggregate_ref(stacked, weights):
     w = weights / jnp.maximum(weights.sum(), 1e-9)
     return jnp.einsum("n,nm->m", w.astype(jnp.float32),
                       stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def weighted_aggregate_tree_ref(updates_stacked, weights):
+    """Leaf-wise FedAvg oracle: ``weighted_aggregate_ref`` over a pytree
+    of stacked updates (the twin of ``ops.weighted_aggregate_tree``)."""
+    def per(leaf):
+        n = leaf.shape[0]
+        return weighted_aggregate_ref(leaf.reshape(n, -1),
+                                      weights).reshape(leaf.shape[1:])
+    return jax.tree.map(per, updates_stacked)
 
 
 def robust_aggregate_ref(stacked, n, *, trim=0, mode="trimmed_mean"):

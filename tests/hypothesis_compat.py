@@ -10,7 +10,8 @@ With hypothesis installed (``pip install -e .[test]``) this is a plain
 re-export — shrinking, the example database and the full strategy
 vocabulary all work. Without it, a miniature implementation of the
 strategies this repo actually uses (``integers``, ``floats``, ``lists``,
-``sampled_from``, ``booleans``, ``tuples``, ``one_of``) draws
+``sampled_from``, ``booleans``, ``tuples``, ``one_of``,
+``dictionaries``, ``text``) draws
 ``max_examples`` pseudo-random examples from a
 fixed per-test seed, so the property tests still execute deterministically
 and regressions fail loudly rather than silently skipping. Unsupported
@@ -60,6 +61,30 @@ except ImportError:
             def draw(rng):
                 n = int(rng.integers(min_size, max_size + 1))
                 return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                out = {}
+                # bounded rejection: duplicate keys shrink the dict in
+                # real hypothesis too, so under-filling is acceptable
+                for _ in range(4 * n):
+                    if len(out) >= n:
+                        break
+                    out[keys.example(rng)] = values.example(rng)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def text(alphabet="abcdefghijklmnopqrstuvwxyz_",
+                 min_size=0, max_size=12):
+            chars = list(alphabet)
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return "".join(chars[int(rng.integers(len(chars)))]
+                               for _ in range(n))
             return _Strategy(draw)
 
         @staticmethod

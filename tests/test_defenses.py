@@ -365,3 +365,40 @@ def test_registry_and_coercion():
     assert {"none", "trimmed_mean", "median", "norm_clip", "krum",
             "validation",
             "trimmed_mean+validation"} <= set(dfs.DEFENSES)
+
+
+# ---------------------------------------------------------------------- #
+# registry completeness (auto-generated from DEFENSES — a new entry is
+# exercised here with zero test edits; repro.check pins the coverage)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(dfs.DEFENSES))
+def test_defense_registry_contract(name):
+    """Every registered defense satisfies the DefensePolicy interface:
+    registry key == name, frozen/hashable, and its components expose the
+    host-oracle entry points both engines dispatch on."""
+    d = dfs.DEFENSES[name]
+    assert d.name == name
+    hash(d)                                     # frozen dataclass
+    assert d.benign == (d.aggregator is None and d.detector is None)
+    agg = d.aggregator
+    if agg is not None:
+        # every aggregator family exposes a host oracle + batched twin
+        assert (hasattr(agg, "aggregate_host")
+                and hasattr(agg, "aggregate_batched")) \
+            or (hasattr(agg, "clip_host") and hasattr(agg, "clip_batched")) \
+            or (hasattr(agg, "select_host")
+                and hasattr(agg, "select_batched"))
+        # ... and dispatches through the shared loop-engine entry point
+        rng = np.random.default_rng(0)
+        plist = [{"w": rng.normal(size=10).astype(np.float32)}
+                 for _ in range(6)]
+        out, stats = dfs.aggregate_host(
+            agg, plist, np.ones(6, np.float32), plist[0], n_byz=1)
+        assert out["w"].shape == (10,)
+        assert isinstance(stats, dfs.DefenseStats)
+    if d.detector is not None:
+        # (2, n): row 0 per-upload val accuracy, row 1 global baseline
+        acc = np.array([[0.9, 0.2, 0.5], [0.6, 0.6, 0.6]], np.float64)
+        a = d.detector.anomaly(acc)
+        assert a.shape == (3,) and (a >= 0).all()
+        assert d.detector.penalties(acc).shape == (3,)

@@ -70,8 +70,8 @@ def test_ssd_scan(B, L, H, P, N, G, chunk):
     C_ = jax.random.normal(ks[4], (B, L, G, N))
     y = ops.ssd_scan(x, dt, A, B_, C_, chunk=chunk)
     rep = H // G
-    yr, _ = ref.ssd_ref(x, dt, A, jnp.repeat(B_, rep, 2),
-                        jnp.repeat(C_, rep, 2))
+    yr, _ = ref.ssd_scan_ref(x, dt, A, jnp.repeat(B_, rep, 2),
+                             jnp.repeat(C_, rep, 2))
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                atol=5e-4, rtol=5e-4)
 
@@ -125,6 +125,21 @@ def test_weighted_aggregate_property(n, m, seed):
                                atol=1e-5, rtol=1e-5)
     assert np.all(np.asarray(out) <= np.asarray(x.max(0)) + 1e-5)
     assert np.all(np.asarray(out) >= np.asarray(x.min(0)) - 1e-5)
+
+
+def test_weighted_aggregate_tree():
+    """Tree wrapper == leaf-wise ref twin on a ragged-shape pytree."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    stacked = {"w": jax.random.normal(ks[0], (4, 3, 5)),
+               "b": jax.random.normal(ks[1], (4, 5))}
+    w = jnp.abs(jax.random.normal(ks[2], (4,))) + 1e-3
+    out = ops.weighted_aggregate_tree(stacked, w)
+    expect = ref.weighted_aggregate_tree_ref(stacked, w)
+    for k in stacked:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(expect[k]),
+                                   atol=1e-5, rtol=1e-5)
+        assert out[k].shape == stacked[k].shape[1:]
 
 
 @pytest.mark.parametrize("mode", ["trimmed_mean", "median"])

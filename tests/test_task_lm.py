@@ -15,7 +15,8 @@ from repro.data.synthetic_mnist import generate
 from repro.data.tokens import make_stream, make_windows
 from repro.federated.server import build_cohort_data
 from repro.federated.simulation import run_experiment, run_sweep
-from repro.federated.task import LM_TINY, LmTask, MnistTask, as_task
+from repro.federated.task import (LM_TINY, TASKS, LmTask, MnistTask,
+                                  as_task)
 from repro.models.transformer import (lm_init, lm_loss, lm_loss_masked,
                                       lm_sgd_epoch, lm_sgd_epoch_masked)
 
@@ -167,10 +168,15 @@ def test_token_flip_fraction_subsamples():
 
 
 def test_token_attack_needs_token_dataset():
+    """The mismatch error names the offending sweep cell (task AND
+    scenario), not just the dataset types — a task x scenario sweep hits
+    this far from where the pairing was configured."""
     cfg = FeelConfig(n_ues=4, n_malicious=1)
-    with pytest.raises(AssertionError, match="token-space attack"):
+    with pytest.raises(AssertionError, match="token-space attack") as ei:
         run_experiment("dqs", cfg=cfg, seed=0, rounds=1, task="mnist_mlp",
                        scenario="token_flip_1to5", n_train=800, n_test=200)
+    assert "task=mnist_mlp" in str(ei.value)
+    assert "scenario=token_flip_1to5" in str(ei.value)
 
 
 def test_token_noise_rate():
@@ -290,3 +296,34 @@ def test_run_experiment_task_defaults():
     with pytest.raises(KeyError, match="unknown task"):
         run_experiment("dqs", cfg=dataclasses.replace(cfg, task="nope"),
                        seed=0, rounds=1)
+
+
+# ---------------------------------------------------------------------- #
+# registry completeness (auto-generated from TASKS — a new entry is
+# exercised here with zero test edits; repro.check pins the coverage)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(TASKS))
+def test_task_registry_contract(name):
+    """Every registered task satisfies the FeelTask interface (task.py
+    module docstring): registry key == name, frozen/hashable (tasks key
+    jit compile caches as static args), every plane's methods present,
+    and the protocol knobs sane."""
+    t = TASKS[name]
+    assert t.name == name and as_task(name) is t
+    hash(t)                                     # static-arg contract
+    assert dataclasses.is_dataclass(t)
+    assert type(t).__dataclass_params__.frozen
+    for method in (
+            # host/data plane
+            "generate_data", "partition_clients", "histogram", "gini",
+            # eval units
+            "unit_labels", "unit_rows", "eval_inputs", "unit_targets",
+            # device plane
+            "init_params", "sgd_epoch", "local_metric", "predict_units",
+            # loop oracle
+            "local_train", "eval_units_loop", "global_metrics"):
+        assert callable(getattr(t, method)), (name, method)
+    assert t.group_size >= 1
+    assert 1 <= t.min_groups <= t.max_groups
+    assert t.batch_size >= 1 and t.default_lr > 0
+    assert t.default_n_train > 0 and t.default_n_test > 0
