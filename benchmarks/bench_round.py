@@ -9,6 +9,7 @@ cohort engine (federated/cohort.py), at the paper's K=50 and beyond.
         --ks 50 500 2000                        # host vs batched control plane
     PYTHONPATH=src python -m benchmarks.bench_round --attacks      # threat plane
     PYTHONPATH=src python -m benchmarks.bench_round --llm          # LM task plane
+    PYTHONPATH=src python -m benchmarks.bench_round --population   # N-scaling
     PYTHONPATH=src python -m benchmarks.bench_round --smoke        # CI gate
 
 Methodology — each (engine, K) measurement runs the §V unit of work in a
@@ -58,6 +59,14 @@ each engine with and without ``REPRO_USE_PALLAS=1`` (flash-attention
 training forwards; interpret mode on CPU — path-exercise rows, not perf
 claims). Loop/vectorized held-out loss is asserted bit-equal per cell —
 written to ``results/BENCH_llm.json``.
+
+``--population`` measures the population plane (DESIGN.md §12): the
+per-round scheduling cost over N candidate UEs at N in {1e4, 1e5, 1e6} —
+exact O(N log N) path vs the schedule-preserving top-M prefilter (both
+kernel layouts; prefilter == exact selection asserted in every timed
+cell) — plus the exact jax kernel re-benched with the population axis
+sharded over a forced 2-device host mesh (the ``default_kernel``
+multi-device crossover) — written to ``results/BENCH_population.json``.
 
 ``--smoke`` runs a tiny instance of every benchmark with loud assertions
 (bucketed padding waste must not exceed the single-pad waste; curves must
@@ -116,17 +125,26 @@ def write_bench_json(name, payload, canonical=True):
     Shared schema: {"bench": ..., "meta": _bench_meta(), **payload}. A
     non-canonical run (ad-hoc --ks / sizes) must not clobber the tracked
     measurement, so it prints and skips instead.
+
+    Every canonical write ALSO appends the record as one line to
+    ``results/BENCH_history.jsonl`` — the commit+env-keyed trend log
+    (the meta block carries commit, python/jax/numpy versions and a UTC
+    timestamp), so re-running any bench on a new commit grows per-bench
+    perf history instead of overwriting it.
     """
     if not canonical:
         print(f"# non-canonical sizes; results/BENCH_{name}.json left "
               "untouched", file=sys.stderr)
         return
-    path = os.path.join(os.path.dirname(__file__), "..", "results",
-                        f"BENCH_{name}.json")
+    results = os.path.join(os.path.dirname(__file__), "..", "results")
+    path = os.path.join(results, f"BENCH_{name}.json")
+    record = {"bench": payload.pop("bench", name),
+              "meta": _bench_meta(), **payload}
     with open(path, "w") as f:
-        json.dump({"bench": payload.pop("bench", name),
-                   "meta": _bench_meta(), **payload}, f, indent=2)
-    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+        json.dump(record, f, indent=2)
+    with open(os.path.join(results, "BENCH_history.jsonl"), "a") as f:
+        f.write(json.dumps(record, separators=(",", ":")) + "\n")
+    print(f"# wrote {os.path.normpath(path)} (+history)", file=sys.stderr)
 
 _WORKER = r"""
 import json, sys, time
@@ -625,6 +643,154 @@ def bench_defenses(ks=DEFENSE_KS, n_mals=DEFENSE_NMALS, reps=10,
     return rows
 
 
+_POPULATION_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.configs.base import FeelConfig
+from repro.core import control as ctl
+from repro.core import population as pop
+from repro.core.scheduler import POLICY_IDS
+from repro.core.wireless import WirelessModel
+
+mode, n, k, n_runs, rounds = (sys.argv[1], int(sys.argv[2]),
+                              int(sys.argv[3]), int(sys.argv[4]),
+                              int(sys.argv[5]))
+cfg = FeelConfig(n_ues=k, n_malicious=max(k // 10, 1), population=n)
+rng = np.random.default_rng(0)
+policies = [list(POLICY_IDS)[i % len(POLICY_IDS)] for i in range(n_runs)]
+wm = WirelessModel(cfg, np.random.default_rng(1))
+sizes = (rng.integers(1, 31, (n_runs, n)) * 50).astype(float)
+cpu = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, (n_runs, n))
+state = ctl.ControlState(
+    policy_id=np.array([POLICY_IDS[p] for p in policies], np.int32),
+    sizes=sizes, divs=rng.uniform(0.0, 0.9, (n_runs, n)),
+    r_min=np.stack([wm.min_rate(wm.train_time(sizes[i], cpu[i]))
+                    for i in range(n_runs)]),
+    reputations=rng.uniform(0.0, 1.0, (n_runs, n)),
+    ages=np.ones((n_runs, n)), cfg=cfg)
+omega = np.full(n_runs, cfg.omega_rep), np.full(n_runs, cfg.omega_div)
+
+def draw(t):
+    g = np.stack([wm.rng.exponential(1.0, n) * wm.distances
+                  ** (-cfg.pathloss_exp) for _ in range(n_runs)])
+    rr = np.stack([np.argsort(np.random.default_rng((t, i)).permutation(n))
+                   for i in range(n_runs)])
+    return g, rr
+
+if mode == "mesh":
+    # exact N-wide schedule_runs on the forced multi-device host mesh:
+    # hybrid (host numpy, cannot shard) vs the jitted jax kernel with the
+    # population axis GSPMD-sharded over the mesh data axes — the
+    # measurement behind default_kernel()'s multi-device "jax" choice
+    import jax
+    from jax.experimental import enable_x64
+    mesh = pop.population_mesh()
+    n_dev = len(jax.devices())
+
+    def jax_round(g, rr):
+        with enable_x64():
+            ops = pop.shard_population(
+                mesh, state.reputations, state.ages, state.divs,
+                state.sizes, state.r_min, g, rr)
+            out = ctl._schedule_kernel(
+                state.policy_id, *ops, omega[0], omega[1],
+                np.asarray(cfg.gamma, float), cfg.bandwidth_hz,
+                cfg.p_watt, cfg.n0_watt_hz, k=k, n_sel=cfg.min_selected)
+            return np.asarray(out[0])
+
+    g0, rr0 = draw(0)
+    xh = ctl.schedule_runs(state, g0, rr0, *omega, kernel="hybrid")[0]
+    assert np.array_equal(jax_round(g0, rr0), xh), "mesh/hybrid mismatch"
+    t_h = t_j = 0.0
+    for t in range(rounds):
+        g, rr = draw(t + 1)
+        t0 = time.perf_counter()
+        xh = ctl.schedule_runs(state, g, rr, *omega, kernel="hybrid")[0]
+        t1 = time.perf_counter()
+        xj = jax_round(g, rr)
+        t_j += time.perf_counter() - t1; t_h += t1 - t0
+        assert np.array_equal(xh, xj), "mesh/hybrid selection mismatch"
+    print(json.dumps({"devices": n_dev,
+                      "hybrid_ms": t_h / rounds * 1e3,
+                      "jax_ms": t_j / rounds * 1e3}))
+else:
+    # exact O(N) path vs the top-M prefilter (both layouts); prefilter ==
+    # exact selection asserted in EVERY timed cell (the preservation
+    # certificate + escalation guarantee, core/population.py)
+    def exact(g, rr):
+        return ctl.schedule_runs(state, g, rr, *omega, kernel="hybrid")
+
+    def pre(g, rr, kern):
+        return pop.prefilter_schedule_runs(state, g, rr, *omega,
+                                           kernel=kern)
+
+    g0, rr0 = draw(0)                     # warmup + parity gate
+    x0 = exact(g0, rr0)[0]
+    for kern in ("hybrid", "jax"):
+        assert np.array_equal(pre(g0, rr0, kern)[0], x0), kern
+    times = {"exact": 0.0, "hybrid": 0.0, "jax": 0.0}
+    esc = {"hybrid": 0, "jax": 0}
+    m = pop.default_m(cfg)
+    for t in range(rounds):
+        g, rr = draw(t + 1)
+        t0 = time.perf_counter()
+        xe = exact(g, rr)[0]
+        times["exact"] += time.perf_counter() - t0
+        for kern in ("hybrid", "jax"):
+            t0 = time.perf_counter()
+            xp, _, _, _, _, info = pre(g, rr, kern)
+            times[kern] += time.perf_counter() - t0
+            assert np.array_equal(xp, xe), (kern, t)
+            esc[kern] += info["n_escalated"]
+            m = info["m"]
+    # selection-tail micro-bench: both paths share the irreducibly O(N)
+    # feature math (diversity / quality / Eq. 9 bisection — every
+    # scheduler must read the N-wide inputs once), so the SUB-linear
+    # claim lives in the stage the prefilter actually shrinks: the
+    # visit-order sort + budget pack, O(N log N + N) exact vs
+    # O(N) argpartition + O(M log M + M) prefiltered. Timed here on
+    # precomputed dqs keys/costs (key choice does not change sort cost).
+    from jax.experimental import enable_x64
+    from repro.core.diversity import diversity_index_rows
+    from repro.core.quality import data_quality_value
+    g, _ = draw(rounds + 1)
+    I = diversity_index_rows(state.divs, state.sizes, state.ages,
+                             cfg.gamma)
+    values = data_quality_value(state.reputations, I, cfg,
+                                omega=(omega[0][:, None],
+                                       omega[1][:, None]))
+    with enable_x64():
+        costs = np.asarray(ctl._cost_kernel(
+            g, state.r_min, cfg.bandwidth_hz, cfg.p_watt,
+            cfg.n0_watt_hz, k=k)).astype(np.int32)
+    keys = -(values / costs)
+    rows_i = np.arange(n_runs)[:, None]
+    order = np.argsort(keys, axis=-1, kind="stable")     # warm both pack
+    np.asarray(ctl._pack_kernel(np.take_along_axis(costs, order, -1),
+                                k=k))                    # shapes (jit)
+    np.asarray(ctl._pack_kernel(costs[rows_i, pop._topm_prefix(keys, m)],
+                                k=k))
+    t_et = t_pt = 0.0
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        order = np.argsort(keys, axis=-1, kind="stable")
+        np.asarray(ctl._pack_kernel(np.take_along_axis(costs, order, -1),
+                                    k=k))
+        t1 = time.perf_counter()
+        kept = pop._topm_prefix(keys, m)
+        np.asarray(ctl._pack_kernel(costs[rows_i, kept], k=k))
+        t_pt += time.perf_counter() - t1; t_et += t1 - t0
+    bytes1 = pop.PopulationState.from_control(state).nbytes()
+    print(json.dumps({
+        "exact_ms": times["exact"] / rounds * 1e3,
+        "prefilter_hybrid_ms": times["hybrid"] / rounds * 1e3,
+        "prefilter_jax_ms": times["jax"] / rounds * 1e3,
+        "exact_tail_ms": t_et / rounds * 1e3,
+        "prefilter_tail_ms": t_pt / rounds * 1e3,
+        "m": m, "escalated_per_round": (esc["hybrid"] + esc["jax"])
+        / (2.0 * rounds), "state_bytes": bytes1}))
+"""
+
 _LLM_WORKER = r"""
 import json, sys, time
 import numpy as np
@@ -698,6 +864,101 @@ def bench_llm(ks=LLM_KS, rounds=2, flash=True, write_json=True):
     return rows
 
 
+POPULATION_NS = (10_000, 100_000, 1_000_000)   # tracked N grid
+POPULATION_DEFAULTS = (POPULATION_NS, 64, 5, 3)    # ns, K, n_runs, rounds
+POPULATION_MESH_DEVICES = 2
+
+
+def bench_population(ns=POPULATION_NS, k=64, n_runs=5, rounds=3,
+                     mesh_devices=POPULATION_MESH_DEVICES,
+                     write_json=True):
+    """Population plane (DESIGN.md §12): per-round scheduling cost over N
+    candidate UEs — the exact O(N log N) path vs the schedule-preserving
+    top-M prefilter (hybrid + jax layouts) — at each N (fresh subprocess
+    per N, cold jit; the worker asserts prefilter == exact selection in
+    EVERY timed cell). A second worker re-benches the exact
+    ``schedule_runs`` on a forced ``mesh_devices``-device host mesh:
+    hybrid (host numpy, unshardable) vs the jax kernel with the
+    population axis GSPMD-sharded — the measurement behind
+    ``default_kernel()`` choosing "jax" on any multi-device mesh.
+
+    results/BENCH_population.json is only (over)written for the
+    canonical grid, where the acceptance claims are asserted below:
+    (a) the full prefilter round beats the exact path at EVERY N, and
+    (b) the selection tail (visit-order sort + budget pack — the stage
+    the prefilter shrinks from O(N log N + N) to O(N) + O(M log M + M))
+    grows SUB-linearly in the exact path's cost over the N span: its
+    share of the exact tail must shrink as N grows. Raw wall-clock of
+    ANY O(N) DRAM-resident stage on this box grows slightly
+    super-linearly once it falls out of cache, so sub-linearity is
+    asserted against the exact path, not against raw N; and total round
+    time cannot be sub-linear on either path — the Eq. 2/3/9 feature
+    math reads every one of the N candidates once, an irreducibly
+    linear floor both paths share."""
+    print("population,N,K,n_runs,exact_ms,prefilter_hybrid_ms,"
+          "prefilter_jax_ms,exact_tail_ms,prefilter_tail_ms,m,"
+          "escalated_per_round,bytes_per_device")
+    rows = []
+    for n in ns:
+        out = _run_worker(_POPULATION_WORKER,
+                          ["paths", n, k, n_runs, rounds])
+        bpd = out["state_bytes"] // mesh_devices
+        rows.append({"N": n, "K": k, "n_runs": n_runs,
+                     "exact_ms": round(out["exact_ms"], 3),
+                     "prefilter_hybrid_ms":
+                         round(out["prefilter_hybrid_ms"], 3),
+                     "prefilter_jax_ms":
+                         round(out["prefilter_jax_ms"], 3),
+                     "exact_tail_ms": round(out["exact_tail_ms"], 3),
+                     "prefilter_tail_ms":
+                         round(out["prefilter_tail_ms"], 3),
+                     "m": out["m"],
+                     "escalated_per_round": out["escalated_per_round"],
+                     "state_bytes": out["state_bytes"],
+                     "bytes_per_device": bpd})
+        r = rows[-1]
+        print(f"population,{n},{k},{n_runs},{r['exact_ms']:.2f},"
+              f"{r['prefilter_hybrid_ms']:.2f},"
+              f"{r['prefilter_jax_ms']:.2f},{r['exact_tail_ms']:.2f},"
+              f"{r['prefilter_tail_ms']:.2f},{r['m']},"
+              f"{r['escalated_per_round']:.2f},{bpd}", flush=True)
+    mesh_rows = []
+    print("population_mesh,N,devices,hybrid_ms,jax_ms,speedup")
+    for n in [n for n in ns if n <= 100_000]:
+        out = _run_worker(
+            _POPULATION_WORKER, ["mesh", n, k, n_runs, rounds],
+            extra_env={"XLA_FLAGS": "--xla_force_host_platform_"
+                                    f"device_count={mesh_devices}"})
+        mesh_rows.append({"N": n, "devices": out["devices"],
+                          "hybrid_ms": round(out["hybrid_ms"], 3),
+                          "jax_ms": round(out["jax_ms"], 3)})
+        print(f"population_mesh,{n},{out['devices']},"
+              f"{out['hybrid_ms']:.2f},{out['jax_ms']:.2f},"
+              f"{out['hybrid_ms'] / out['jax_ms']:.2f}", flush=True)
+    canonical = (tuple(ns), k, n_runs, rounds) == POPULATION_DEFAULTS
+    if canonical and len(rows) >= 2:
+        # the acceptance claims: (a) the prefilter beats the exact path
+        # in every cell, and (b) its selection tail (the stage the top-M
+        # cut shrinks) grows sub-linearly in the exact path's cost over
+        # the N span (shrinking share of the exact tail) — see the
+        # docstring for why raw-N wall-clock ratios are not the claim
+        for r in rows:
+            assert r["prefilter_hybrid_ms"] < r["exact_ms"], r
+            assert r["prefilter_tail_ms"] < r["exact_tail_ms"], r
+        tail_pre = (rows[-1]["prefilter_tail_ms"]
+                    / rows[0]["prefilter_tail_ms"])
+        tail_exact = (rows[-1]["exact_tail_ms"]
+                      / rows[0]["exact_tail_ms"])
+        assert tail_pre < tail_exact, (tail_pre, tail_exact)
+    if write_json:
+        write_bench_json(
+            "population",
+            {"bench": "population_plane_schedule_scaling",
+             "unit": "ms_per_round_all_runs", "rows": rows,
+             "mesh": mesh_rows}, canonical=canonical)
+    return rows, mesh_rows
+
+
 def smoke():
     """Tiny end-to-end run of both benchmarks with loud assertions.
 
@@ -734,6 +995,15 @@ def smoke():
     llm_rows = bench_llm(ks=[4], rounds=1, flash=False, write_json=False)
     assert len(llm_rows) == 2 and all(r["s_per_round"] > 0
                                       for r in llm_rows)
+    # population plane: the worker asserts prefilter == exact selection
+    # in every timed cell (incl. the forced 2-device mesh row)
+    pop_rows, pop_mesh = bench_population(ns=[2000], k=16, n_runs=5,
+                                          rounds=1, write_json=False)
+    assert (pop_rows[0]["exact_ms"] > 0
+            and pop_rows[0]["prefilter_hybrid_ms"] > 0
+            and pop_rows[0]["prefilter_jax_ms"] > 0
+            and pop_rows[0]["prefilter_tail_ms"] > 0)
+    assert pop_mesh and pop_mesh[0]["devices"] == 2, pop_mesh
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
           f"control speedup {ctl_rows[0]['speedup']:.2f}x, "
@@ -786,12 +1056,20 @@ def main():
                     help="benchmark the LM task plane: lm_tiny per-round "
                          "cost, loop vs vectorized engine, flash on/off; "
                          "writes results/BENCH_llm.json")
+    ap.add_argument("--population", action="store_true",
+                    help="benchmark the population plane: exact O(N) "
+                         "schedule vs the top-M prefilter at N in "
+                         "{1e4,1e5,1e6} plus the sharded-mesh jax "
+                         "re-bench; writes results/BENCH_population.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny asserted run of every benchmark (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.population:
+        bench_population()
         return
     if args.llm:
         bench_llm()

@@ -9,8 +9,11 @@ take every module imported (transitively) from tests/, examples/ and
 benchmarks/ as live, and report the rest with line counts.
 
 Dead modules are NOT violations — several are named targets of open
-ROADMAP items (e.g. sharding/ for the million-UE control plane). The
-report exists so growth is a decision, not an accident.
+ROADMAP items (e.g. launch/serve.py for the async/streaming engine).
+The report exists so growth is a decision, not an accident; when a PR
+revives a subsystem, tests/test_check.py pins it OFF this list so it
+cannot silently lose its last caller (sharding/ + launch/mesh.py left
+the list with the population plane, DESIGN.md §12).
 """
 from __future__ import annotations
 

@@ -262,6 +262,11 @@ class FeelConfig:
     """Federated-edge-learning round configuration (the paper's Table I)."""
     n_ues: int = 50               # K
     n_malicious: int = 5
+    # Candidate population size N (DESIGN.md §12). ``n_ues`` stays the
+    # bandwidth budget K — the Eq. 9 fraction denominator, the Alg. 2
+    # knapsack capacity — while the scheduler ranks over all N candidates.
+    # None pins the legacy N == K regime (every pre-population caller).
+    population: Optional[int] = None
     rounds: int = 15              # t_max
     local_epochs: int = 3         # epsilon (paper leaves it unspecified)
     deadline_s: float = 300.0     # T
@@ -312,6 +317,15 @@ class FeelConfig:
     # scalars, so the dBm -> watt conversion lives here, once
     # (``dbm_to_watt`` below; wireless.py re-exports it).
     # ------------------------------------------------------------------ #
+    @property
+    def n_population(self) -> int:
+        """Candidate population size N (defaults to the budget K)."""
+        n = self.population if self.population is not None else self.n_ues
+        assert n >= self.n_ues, (
+            f"population {n} smaller than the bandwidth budget K="
+            f"{self.n_ues}")
+        return n
+
     @property
     def p_watt(self) -> float:
         """Uplink transmit power P_k in watts."""

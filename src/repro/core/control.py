@@ -80,6 +80,11 @@ class ControlState:
     ages) are synced from/to the owning ``FeelServer`` objects around each
     round (``pull`` / ``push``) so the servers' logs and summaries keep
     reading their usual attributes.
+
+    The trailing axis is the candidate width: K in the legacy regime,
+    N = cfg.n_population under a population cut (DESIGN.md §12) — every
+    kernel takes the width from the arrays and the bandwidth budget from
+    ``cfg.n_ues``.
     """
     policy_id: np.ndarray     # (R,)  int32, scheduler.POLICY_IDS
     sizes: np.ndarray         # (R, K) float64 true dataset sizes
@@ -165,7 +170,7 @@ def _schedule_kernel(policy_id, rep, ages, divs, sizes, r_min, gains,
         k_best = jnp.argmax(masked)
         use_fb = ((pid == 0) & feas.any()
                   & (masked[k_best] > (values * x).sum()))
-        onehot_best = jnp.zeros(k, bool).at[k_best].set(True)
+        onehot_best = jnp.zeros_like(x).at[k_best].set(True)
         x = jnp.where(use_fb, onehot_best, x)
         alpha = jnp.where(use_fb,
                           jnp.where(onehot_best, costs_f / k, 0.0), alpha)
@@ -181,7 +186,7 @@ def _schedule_kernel(policy_id, rep, ages, divs, sizes, r_min, gains,
         # highest-value UE (whole band); problem (8) was infeasible, the
         # caller logs objective 0.0 (DESIGN.md §2)
         forced = ~x.any()
-        onehot_f = jnp.zeros(k, bool).at[jnp.argmax(values)].set(True)
+        onehot_f = jnp.zeros_like(x).at[jnp.argmax(values)].set(True)
         x = jnp.where(forced, onehot_f, x)
         alpha = jnp.where(forced, jnp.where(onehot_f, 1.0, 0.0), alpha)
         return x, alpha, costs, values, forced
@@ -203,8 +208,9 @@ _pack_kernel = functools.partial(jax.jit, static_argnames=("k",))(pack_scan)
 
 def _schedule_hybrid(state: ControlState, gains, rand_rank, w_rep, w_div):
     cfg = state.cfg
-    K = cfg.n_ues
+    K = cfg.n_ues                        # bandwidth budget (fractions)
     R = state.n_runs
+    N = state.reputations.shape[1]       # candidate width (N == K legacy)
     pid = state.policy_id
 
     # Eq. 2/3 — batched numpy, same float64 ops as the host oracle
@@ -221,7 +227,7 @@ def _schedule_hybrid(state: ControlState, gains, rand_rank, w_rep, w_div):
     costs_f = costs.astype(float)
 
     # priority keys — the ONE definition in scheduler.priority_key
-    keys = np.empty((R, K))
+    keys = np.empty((R, N))
     m = pid == 0
     keys[m] = priority_key("dqs", values[m], costs_f[m], K)
     m = pid == 1
@@ -236,7 +242,7 @@ def _schedule_hybrid(state: ControlState, gains, rand_rank, w_rep, w_div):
     order = np.argsort(keys, axis=-1, kind="stable")
     c_sorted = np.take_along_axis(costs, order, -1).astype(np.int32)
     take = np.asarray(_pack_kernel(c_sorted, k=K))
-    x = np.zeros((R, K), bool)
+    x = np.zeros((R, N), bool)
     np.put_along_axis(x, order, take, -1)
     alpha = np.where(x, costs_f / K, 0.0)
 
@@ -264,7 +270,7 @@ def _schedule_hybrid(state: ControlState, gains, rand_rank, w_rep, w_div):
     if tv.size:
         n = cfg.min_selected
         top = np.argsort(-values[tv], axis=-1, kind="stable")[:, :n]
-        xt = np.zeros((tv.size, K), bool)
+        xt = np.zeros((tv.size, N), bool)
         np.put_along_axis(xt, top, True, -1)
         x[tv] = xt
         alpha[tv] = np.where(xt, 1.0 / max(n, 1), 0.0)
@@ -287,8 +293,18 @@ def _schedule_hybrid(state: ControlState, gains, rand_rank, w_rep, w_div):
 def default_kernel() -> str:
     """Backend default, resolved lazily on first use — probing
     jax.default_backend() at import time would eagerly initialize XLA for
-    every ``import repro.core`` and lock the platform choice."""
-    return "hybrid" if jax.default_backend() == "cpu" else "jax"
+    every ``import repro.core`` and lock the platform choice.
+
+    Single-device CPU keeps "hybrid" (numpy's sort + elementwise beat
+    XLA CPU there, module docstring); accelerators and *multi-device
+    meshes* default to "jax" — the hybrid layout is host-numpy and
+    cannot shard, while the jitted kernel GSPMD-partitions the UE axis
+    across the mesh and wins from the first extra device (re-benched on
+    the forced-multi-device host mesh in results/BENCH_population.json;
+    crossover recorded in DESIGN.md §12)."""
+    if jax.default_backend() != "cpu":
+        return "jax"
+    return "jax" if jax.local_device_count() > 1 else "hybrid"
 
 
 def schedule_runs(state: ControlState, gains: np.ndarray,

@@ -61,7 +61,7 @@ def reputation_update_eq1(values, sel_mask, acc_local, acc_test,
 class ReputationTracker:
     def __init__(self, cfg: FeelConfig):
         self.cfg = cfg
-        self.values = np.ones(cfg.n_ues)
+        self.values = np.ones(cfg.n_population)
 
     def update(self, participants: np.ndarray,
                acc_local: np.ndarray, acc_test: np.ndarray,

@@ -71,10 +71,13 @@ def greedy_pack(order: np.ndarray, costs: np.ndarray, k: int):
 
     A UE whose cost exceeds the *remaining* budget (or the deadline, c > K)
     is skipped and the walk continues — later cheaper UEs may still fit.
-    Returns (x bool (K,), alpha (K,)).
+    The selection width is ``len(costs)`` (the candidate population N);
+    ``k`` is only the budget of fractions — N == k in the legacy regime,
+    N > k under a population cut (DESIGN.md §12).
+    Returns (x bool (N,), alpha (N,)).
     """
-    x = np.zeros(k, bool)
-    alpha = np.zeros(k)
+    x = np.zeros(len(costs), bool)
+    alpha = np.zeros(len(costs))
     budget = k
     for u in order:
         c = int(costs[u])
@@ -130,10 +133,12 @@ def pack_scan(c_sorted, k: int):
 def greedy_pack_jnp(sort_key, costs, k: int):
     """jit/vmap-able twin of ``greedy_pack`` for the batched control plane:
     stable argsort of the priority key, then the ``pack_scan`` budget walk.
-    ``costs`` int32; returns (x bool (K,), alpha float (K,))."""
+    Width-polymorphic like ``greedy_pack``: selection width is
+    ``costs.shape[-1]`` (N), ``k`` is only the budget.
+    ``costs`` int32; returns (x bool (N,), alpha float (N,))."""
     order = jnp.argsort(sort_key, stable=True)
     take = pack_scan(jnp.take(costs, order), k)
-    x = jnp.zeros(k, bool).at[order].set(take)
+    x = jnp.zeros(costs.shape, bool).at[order].set(take)
     alpha = jnp.where(x, costs.astype(sort_key.dtype) / k, 0.0)
     return x, alpha
 
@@ -151,9 +156,9 @@ def dqs_schedule(values: np.ndarray, costs: np.ndarray,
     if feas.any():
         k_best = int(np.flatnonzero(feas)[np.argmax(values[feas])])
         if values[k_best] > values[x].sum():
-            x = np.zeros(K, bool)
+            x = np.zeros(len(values), bool)
             x[k_best] = True
-            alpha = np.zeros(K)
+            alpha = np.zeros(len(values))
             alpha[k_best] = costs[k_best] / K
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
@@ -162,14 +167,16 @@ def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
                          cfg: FeelConfig, max_k: int = 16) -> Schedule:
     """Exact knapsack by enumeration — oracle for tests (K <= max_k).
 
-    Same semantics as the greedy path: K and the fraction budget come from
+    Same semantics as the greedy path: the fraction budget comes from
     ``cfg.n_ues`` (the seed ignored ``cfg`` and used ``len(values)``, which
-    silently changed the budget whenever the two disagreed)."""
+    silently changed the budget whenever the two disagreed); the candidate
+    width is ``len(values)`` — N of a population cut, K otherwise."""
     K = cfg.n_ues
-    assert len(values) == K, (len(values), K)
-    assert K <= max_k, "brute force limited to small K"
-    best, best_x = -1.0, np.zeros(K, bool)
-    feas = [k for k in range(K) if costs[k] <= K]
+    N = len(values)
+    assert N >= K, (N, K)
+    assert N <= max_k, "brute force limited to small instances"
+    best, best_x = -1.0, np.zeros(N, bool)
+    feas = [k for k in range(N) if costs[k] <= K]
     for r in range(len(feas) + 1):
         for combo in itertools.combinations(feas, r):
             c = sum(int(costs[k]) for k in combo)
@@ -177,7 +184,7 @@ def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
                 v = float(values[list(combo)].sum()) if combo else 0.0
                 if v > best:
                     best = v
-                    best_x = np.zeros(K, bool)
+                    best_x = np.zeros(N, bool)
                     best_x[list(combo)] = True
     alpha = np.where(best_x, costs / K, 0.0)
     return Schedule(x=best_x, alpha=alpha, cost=costs, value=values)
@@ -189,7 +196,7 @@ def brute_force_schedule(values: np.ndarray, costs: np.ndarray,
 def random_schedule(values, costs, cfg, rng) -> Schedule:
     """Random feasible packing (ignores data quality)."""
     K = cfg.n_ues
-    x, alpha = greedy_pack(rng.permutation(K), costs, K)
+    x, alpha = greedy_pack(rng.permutation(len(values)), costs, K)
     return Schedule(x=x, alpha=alpha, cost=costs, value=values)
 
 
@@ -219,9 +226,8 @@ def top_value_schedule(values, costs, cfg, n: int) -> Schedule:
     ``costs = ones(K)``, so every ``top_value`` Schedule.cost misreported
     the channel state (``FeelServer._schedule`` now threads the actual
     Eq. 9 costs through)."""
-    K = cfg.n_ues
     order = np.argsort(-values, kind="stable")[:n]
-    x = np.zeros(K, bool)
+    x = np.zeros(len(values), bool)
     x[order] = True
     alpha = np.where(x, 1.0 / max(n, 1), 0.0)
     return Schedule(x=x, alpha=alpha, cost=np.asarray(costs), value=values)

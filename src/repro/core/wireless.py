@@ -60,7 +60,9 @@ class WirelessModel:
         self.cfg = cfg
         self.rng = rng
         half = cfg.cell_side_m / 2.0
-        xy = rng.uniform(-half, half, size=(cfg.n_ues, 2))
+        # one position per *candidate* (N == K when no population is set);
+        # Eq. 9's budget/denominator stays cfg.n_ues in cost()/cost_scan()
+        xy = rng.uniform(-half, half, size=(cfg.n_population, 2))
         self.distances = np.maximum(np.linalg.norm(xy, axis=1), 1.0)
         self.p_watt = cfg.p_watt
         self.n0 = cfg.n0_watt_hz     # W/Hz

@@ -56,6 +56,7 @@ from repro.core import (ReputationTracker, WirelessModel, adaptive_weights,
                         data_quality_value, diversity_index, dqs_schedule,
                         top_value_schedule)
 from repro.core import control as ctl
+from repro.core import population
 from repro.core.scheduler import (Schedule, best_channel_schedule,
                                   max_count_schedule, random_schedule)
 from repro.data.partition import (ClientData, pad_clients,
@@ -274,18 +275,25 @@ class FeelServer:
         self.pad_to = pad_to        # stable cohort shape across seeds
         self.n_buckets = n_buckets
 
+        # candidate width: N = cfg.n_population (== n_ues in the legacy
+        # regime, > n_ues under a population cut, DESIGN.md §12) — every
+        # per-UE control array spans the full candidate population while
+        # cfg.n_ues stays the Eq. 9 bandwidth budget
+        assert len(clients) == cfg.n_population, \
+            (len(clients), cfg.n_population)
         self.wireless = WirelessModel(cfg, rng)
         self.reputation = ReputationTracker(cfg)
         self.params = self.task.init_params(
             jax.random.PRNGKey(int(rng.integers(1 << 31))))
-        self.ages = np.ones(cfg.n_ues)          # rounds since last selected
-        self.cpu_hz = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max, cfg.n_ues)
+        self.ages = np.ones(cfg.n_population)   # rounds since last selected
+        self.cpu_hz = rng.uniform(cfg.cpu_hz_min, cfg.cpu_hz_max,
+                                  cfg.n_population)
         self.sizes = np.array([c.size for c in clients], float)
         # malicious-set layout for the activity schedule: rank within the
         # malicious set (by ue_id) drives the colluding round-robin
         self._mal_mask = np.array([c.malicious for c in clients])
         mal_ids = np.flatnonzero(self._mal_mask)
-        self._mal_rank = np.full(cfg.n_ues, -1)
+        self._mal_rank = np.full(cfg.n_population, -1)
         self._mal_rank[mal_ids] = np.arange(mal_ids.size)
         # stale free-riders replay the global model from ``staleness``
         # rounds ago; keep exactly that much history (None otherwise)
@@ -659,9 +667,9 @@ class FeelServer:
             # the actual participant set, not the empty one.
             k = int(np.argmax(values))
             sel = np.array([k])
-            x = np.zeros(self.cfg.n_ues, bool)
+            x = np.zeros(values.size, bool)
             x[k] = True
-            alpha = np.zeros(self.cfg.n_ues)
+            alpha = np.zeros(values.size)
             alpha[k] = 1.0          # the forced UE gets the whole band
             sched = Schedule(x=x, alpha=alpha, cost=sched.cost,
                              value=sched.value)
@@ -682,9 +690,10 @@ class FeelServer:
         every run's stream identical to its sequential twin."""
         gains = self.wireless.draw_channels().gains
         if self.policy == "random":
-            rand_rank = np.argsort(self.rng.permutation(self.cfg.n_ues))
+            rand_rank = np.argsort(
+                self.rng.permutation(self.cfg.n_population))
         else:
-            rand_rank = np.arange(self.cfg.n_ues)
+            rand_rank = np.arange(self.cfg.n_population)
         return gains, rand_rank
 
     def _schedule_round_batched(self, t: int):
@@ -692,9 +701,18 @@ class FeelServer:
         st.pull([self])
         gains, rand_rank = self.draw_control_inputs()
         w_rep, w_div = self._omega(t)
-        x, alpha, costs, values, forced = ctl.schedule_runs(
-            st, gains[None], rand_rank[None],
-            np.array([w_rep]), np.array([w_div]))
+        if self.cfg.population is not None:
+            # population cut: schedule through the top-M prefilter
+            # (schedule-preserving by certificate — identical selection,
+            # core/population.py / DESIGN.md §12)
+            x, alpha, costs, values, forced, _ = \
+                population.prefilter_schedule_runs(
+                    st, gains[None], rand_rank[None],
+                    np.array([w_rep]), np.array([w_div]))
+        else:
+            x, alpha, costs, values, forced = ctl.schedule_runs(
+                st, gains[None], rand_rank[None],
+                np.array([w_rep]), np.array([w_div]))
         sched = Schedule(x=x[0], alpha=alpha[0], cost=costs[0],
                          value=values[0])
         return values[0], sched, sched.selected, bool(forced[0])

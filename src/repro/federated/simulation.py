@@ -57,6 +57,7 @@ from repro.configs.base import FeelConfig
 from repro.core import attacks as atk
 from repro.core import control as ctl
 from repro.core import defenses as dfs
+from repro.core import population
 from repro.core.poisoning import pick_malicious
 from repro.core.scheduler import Schedule
 from repro.federated import cohort
@@ -79,8 +80,16 @@ def run_experiment(policy: str = "dqs",
                    engine: str = "vectorized",
                    control: str = "batched",
                    scenario=None, defense=None,
-                   task: Optional[FeelTask] = None) -> Dict:
+                   task: Optional[FeelTask] = None,
+                   population: Optional[int] = None) -> Dict:
     """One FEEL experiment; returns the per-round curves + run summary.
+
+    ``population`` — candidate population size N (DESIGN.md §12): the
+    scheduler ranks over N candidate UEs per round while ``cfg.n_ues``
+    stays the bandwidth budget K. None (default) pins the legacy N == K
+    regime — bit-identical streams and schedules to every pre-population
+    caller. With N > K the batched control plane routes through the
+    schedule-preserving top-M prefilter (core/population.py).
 
     ``task`` — a ``federated.task.FeelTask`` (object or registry name;
     None defers to ``cfg.task``, default the paper's ``mnist_mlp``).
@@ -111,6 +120,8 @@ def run_experiment(policy: str = "dqs",
     cfg = cfg or FeelConfig()
     tsk = as_task(task if task is not None else cfg.task)
     cfg = dataclasses.replace(cfg, task=tsk.name)
+    if population is not None:
+        cfg = dataclasses.replace(cfg, population=int(population))
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0], omega_div=omega[1])
     n_train = tsk.default_n_train if n_train is None else n_train
@@ -126,8 +137,8 @@ def run_experiment(policy: str = "dqs",
                                   model_poison_scale, lie_boost)
     rng = np.random.default_rng(seed)
     train, test = tsk.generate_data(n_train, n_test, seed)
-    malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
-    clients = tsk.partition_clients(train, cfg.n_ues, rng,
+    malicious = pick_malicious(cfg.n_population, cfg.n_malicious, rng)
+    clients = tsk.partition_clients(train, cfg.n_population, rng,
                                     None if scn.benign else malicious,
                                     scn.data,
                                     context=f"task={tsk.name}, "
@@ -296,7 +307,8 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
               engine: str = "vectorized",
               control: str = "batched",
               n_buckets: int = 3,
-              stack_runs: bool = True) -> SweepResult:
+              stack_runs: bool = True,
+              population: Optional[int] = None) -> SweepResult:
     """Run the full (tasks x policies x seeds x scenarios x defenses) grid
     batched.
 
@@ -359,8 +371,16 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
 
     ``n_train``/``n_test`` default per task (each task's protocol sizes);
     an explicit value applies to every task in the grid.
+
+    ``population`` — candidate population size N for EVERY run of the
+    sweep (DESIGN.md §12; None = the legacy N == cfg.n_ues regime). The
+    data is partitioned over all N candidates, the control plane ranks
+    over N through the schedule-preserving top-M prefilter, and only the
+    per-round scheduled cohorts (<= K fractions' worth) train.
     """
     cfg = cfg or FeelConfig()
+    if population is not None:
+        cfg = dataclasses.replace(cfg, population=int(population))
     if omega is not None:
         cfg = dataclasses.replace(cfg, omega_rep=omega[0],
                                   omega_div=omega[1])
@@ -400,9 +420,10 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                     continue
                 train, test = data_cache[(tsk.name, seed)]
                 rng = np.random.default_rng(seed)
-                malicious = pick_malicious(cfg.n_ues, cfg.n_malicious, rng)
+                malicious = pick_malicious(cfg.n_population,
+                                           cfg.n_malicious, rng)
                 clients = tsk.partition_clients(
-                    train, cfg.n_ues, rng,
+                    train, cfg.n_population, rng,
                     None if scn.benign else malicious, scn.data,
                     context=f"task={tsk.name}, scenario={scn.name}")
                 # freeze the post-partition RNG state: each run restores it
@@ -506,15 +527,22 @@ def _schedule_runs_stacked(runs: List[_SweepRun],
     ``control.schedule_runs`` call and scatter the per-run Schedules."""
     servers = [r.server for r in runs]
     sweep_ctrl.pull(servers)
-    K = servers[0].cfg.n_ues
-    gains = np.empty((len(runs), K))
-    rand_rank = np.empty((len(runs), K), int)
+    N = servers[0].cfg.n_population     # candidate width (== n_ues legacy)
+    gains = np.empty((len(runs), N))
+    rand_rank = np.empty((len(runs), N), int)
     omega = np.empty((len(runs), 2))
     for i, s in enumerate(servers):
         gains[i], rand_rank[i] = s.draw_control_inputs()
         omega[i] = s._omega(t)
-    x, alpha, costs, values, forced = ctl.schedule_runs(
-        sweep_ctrl, gains, rand_rank, omega[:, 0], omega[:, 1])
+    if sweep_ctrl.cfg.population is not None:
+        # population cut: the schedule-preserving top-M prefilter
+        # (identical selection by certificate, core/population.py)
+        x, alpha, costs, values, forced, _ = \
+            population.prefilter_schedule_runs(
+                sweep_ctrl, gains, rand_rank, omega[:, 0], omega[:, 1])
+    else:
+        x, alpha, costs, values, forced = ctl.schedule_runs(
+            sweep_ctrl, gains, rand_rank, omega[:, 0], omega[:, 1])
     for i, run in enumerate(runs):
         sched = Schedule(x=x[i], alpha=alpha[i], cost=costs[i],
                          value=values[i])

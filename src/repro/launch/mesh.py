@@ -24,7 +24,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_parallel: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    """Small ("data", "model") mesh over whatever devices exist.
+
+    Live consumers: the population plane (``core/population.py``) shards
+    the N-candidate axis over this mesh's data axis (DESIGN.md §12), and
+    tests / CPU examples use it as the stand-in production mesh. When
+    ``model_parallel`` does not divide the device count the remainder
+    devices are left out of the mesh (n // mp data slices).
+    """
     n = len(jax.devices())
     mp = min(model_parallel, n)
     return jax.make_mesh((n // mp, mp), ("data", "model"))

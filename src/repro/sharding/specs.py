@@ -17,6 +17,11 @@ Baseline layout (single pod 16x16, axes ("data", "model")):
 
 All rules return PartitionSpecs; GSPMD pads non-divisible dims (e.g. Qwen's 60
 experts, vocab 50280) — correctness is unaffected, the dry-run prices it.
+
+``data_axes`` + ``named`` are also the sharding primitives of the
+population plane (``core/population.py``, DESIGN.md §12): the (R, N)
+control arrays shard their N-candidate trailing axis over the mesh's
+data axes with ``named(mesh, PartitionSpec(None, data_axes(mesh)))``.
 """
 from __future__ import annotations
 

@@ -4,7 +4,8 @@ and LM-task benchmarks with loud internal assertions — a bench
 regression (engine crash, padding-waste regression, sweep/sequential
 divergence, host/batched control-plane selection mismatch,
 masked/per-client attack-application mismatch, host/batched robust
-aggregation mismatch, LM loop/vectorized loss divergence) fails here
+aggregation mismatch, LM loop/vectorized loss divergence,
+prefilter/exact population-schedule divergence) fails here
 instead of rotting silently until the next manual bench run."""
 import os
 import subprocess
@@ -48,3 +49,10 @@ def test_bench_round_smoke():
     for eng in ("loop", "vectorized"):
         assert any(line.startswith(f"llm,{eng},") for line in
                    r.stdout.splitlines()), eng
+    # population plane: exact-vs-prefilter scaling rows + the forced
+    # 2-device mesh row (prefilter == exact asserted inside the worker)
+    assert any(line.startswith("population,") for line in
+               r.stdout.splitlines())
+    assert any(line.startswith("population_mesh,")
+               and line.split(",")[2] == "2"
+               for line in r.stdout.splitlines())

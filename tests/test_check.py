@@ -49,6 +49,20 @@ def test_repo_is_clean_strict():
     assert inv["dead_loc"] == sum(m["loc"] for m in inv["dead"])
 
 
+def test_population_plane_revived_sharding_stack():
+    """The population plane (DESIGN.md §12) revived part of the seed's
+    big-model serving inheritance: core.population imports launch.mesh
+    and sharding.specs, so both must now be LIVE in the
+    dead-inheritance inventory — if either falls back onto the dead
+    list, the million-UE mesh path silently lost its only caller."""
+    inv = run_checks().inventory
+    dead = {m["module"] for m in inv["dead"]}
+    for mod in ("repro.core.population", "repro.launch.mesh",
+                "repro.sharding.specs"):
+        assert mod not in dead, f"{mod} regressed to dead inheritance"
+    assert not any(m.startswith("repro.sharding") for m in dead), dead
+
+
 def test_cli_strict_json_report(tmp_path):
     out = tmp_path / "check_report.json"
     rc = check_main(["--strict", "--json", "--out", str(out),

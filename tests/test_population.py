@@ -1,0 +1,270 @@
+"""Population plane (core/population.py, DESIGN.md §12).
+
+The contracts under test:
+
+- PREFILTER PRESERVATION: ``prefilter_schedule_runs`` (top-M candidate
+  cut + certificate + escalation) selects exactly the same cohort as the
+  exact N-wide ``control.schedule_runs`` — for every packing policy,
+  every M (certificate-passing AND escalated rows), both kernel layouts.
+- SCATTER PARITY: ``scatter_finalize`` (O(K) sparse update of the
+  N-wide state) is bitwise identical to the dense ``finalize_runs``
+  hybrid path, and the ``t - last_sel`` age encoding reproduces the
+  dense age trajectory in exact integers.
+- N == K PINNING: ``population=n_ues`` is the legacy regime — same RNG
+  streams, same schedules, same curves as ``population=None``.
+- The revived mesh plumbing (launch.mesh + sharding.specs) shards the
+  population axis without changing the schedule (subprocess, forced
+  2-device host CPU).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs.base import FeelConfig
+from repro.core import control as ctl
+from repro.core import population as pop
+from repro.core.scheduler import POLICY_IDS
+
+ALL_POLICIES = list(POLICY_IDS)
+
+
+def _instance(seed, k, n, r=10):
+    """Random (R, N) control instance cycling all five policies."""
+    rng = np.random.default_rng(seed)
+    cfg = FeelConfig(n_ues=k, population=n)
+    state = ctl.ControlState(
+        policy_id=np.array([POLICY_IDS[ALL_POLICIES[i % 5]]
+                            for i in range(r)], np.int32),
+        sizes=rng.uniform(100, 3000, (r, n)),
+        divs=rng.uniform(0, 1, (r, n)),
+        r_min=rng.uniform(1e4, 1e7, (r, n)),
+        reputations=rng.uniform(0, 1, (r, n)),
+        ages=rng.integers(1, 10, (r, n)).astype(float),
+        cfg=cfg)
+    gains = rng.exponential(1e-9, (r, n))
+    rand_rank = np.stack([np.argsort(rng.permutation(n))
+                          for _ in range(r)])
+    omega = (np.full(r, cfg.omega_rep), np.full(r, cfg.omega_div))
+    return cfg, state, gains, rand_rank, omega
+
+
+# ---------------------------------------------------------------------- #
+# Prefilter preservation
+# ---------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.integers(4, 12),
+       st.sampled_from([2, 5, 12]))
+@settings(max_examples=12, deadline=None)
+def test_prefilter_matches_exact_all_policies(seed, k, n_factor):
+    """Top-M prefilter == exact N-wide schedule, across all five packing
+    policies, for M values that exercise BOTH the certificate-pass fast
+    path and the escalation path (m down to min_selected)."""
+    n = k * n_factor
+    cfg, state, gains, rand_rank, omega = _instance(seed, k, n)
+    exact = ctl.schedule_runs(state, gains, rand_rank, *omega,
+                              kernel="hybrid")
+    for m in {cfg.min_selected, max(k, cfg.min_selected), 2 * k, n}:
+        out = pop.prefilter_schedule_runs(state, gains, rand_rank, *omega,
+                                          m=m, kernel="hybrid")
+        x, alpha, costs, values, forced, info = out
+        np.testing.assert_array_equal(x, exact[0], err_msg=f"m={m}")
+        np.testing.assert_array_equal(alpha, exact[1], err_msg=f"m={m}")
+        np.testing.assert_array_equal(costs, exact[2], err_msg=f"m={m}")
+        np.testing.assert_array_equal(values, exact[3], err_msg=f"m={m}")
+        np.testing.assert_array_equal(forced, exact[4], err_msg=f"m={m}")
+        assert info["m"] == min(m, n)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 10))
+@settings(max_examples=6, deadline=None)
+def test_prefilter_jax_matches_exact(seed, k):
+    """The jax prefilter layout (lax.top_k cut, shardable) picks the
+    same UEs/costs/forced as the exact path; alpha to ~1 ulp."""
+    n = 8 * k
+    cfg, state, gains, rand_rank, omega = _instance(seed, k, n)
+    exact = ctl.schedule_runs(state, gains, rand_rank, *omega,
+                              kernel="hybrid")
+    for m in (cfg.min_selected + 1, 2 * k):
+        x, alpha, costs, values, forced, _ = pop.prefilter_schedule_runs(
+            state, gains, rand_rank, *omega, m=m, kernel="jax")
+        np.testing.assert_array_equal(x, exact[0], err_msg=f"m={m}")
+        np.testing.assert_array_equal(costs, exact[2], err_msg=f"m={m}")
+        np.testing.assert_array_equal(forced, exact[4], err_msg=f"m={m}")
+        np.testing.assert_allclose(alpha, exact[1], rtol=1e-14, atol=0)
+
+
+def test_prefilter_escalation_is_exercised():
+    """A tiny M must trip the preservation certificate on some rows (and
+    the escalated rows still match the exact schedule — covered above);
+    a full-width M never escalates."""
+    cfg, state, gains, rand_rank, omega = _instance(0, 8, 64)
+    esc = 0
+    for seed in range(5):
+        _, state, gains, rand_rank, omega = _instance(seed, 8, 64)
+        *_, info = pop.prefilter_schedule_runs(
+            state, gains, rand_rank, *omega, m=cfg.min_selected,
+            kernel="hybrid")
+        esc += info["n_escalated"]
+    assert esc > 0, "certificate never failed at the minimum M"
+    *_, info = pop.prefilter_schedule_runs(state, gains, rand_rank,
+                                           *omega, m=64, kernel="hybrid")
+    assert info["n_escalated"] == 0 and info["m"] == 64
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 30))
+@settings(max_examples=20, deadline=None)
+def test_topm_prefix_is_stable_argsort_prefix(seed, m):
+    """_topm_prefix == the stable ascending argsort prefix, including
+    heavy ties (small integer key alphabet)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 6, (4, 40)).astype(float)
+    m = min(m, keys.shape[1])
+    got = pop._topm_prefix(keys, m)
+    want = np.argsort(keys, axis=-1, kind="stable")[:, :m]
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------- #
+# Scatter finalize / PopulationState
+# ---------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_scatter_finalize_bitwise_matches_dense(seed):
+    """scatter_finalize (sparse K-sized writes into the N-wide state) ==
+    finalize_runs (dense hybrid path) bitwise, over several rounds with
+    empty cohorts and defense penalties mixed in; the t - last_sel age
+    encoding reproduces the dense ages exactly."""
+    rng = np.random.default_rng(seed)
+    R, N, K = 6, 50, 10
+    cfg = FeelConfig(n_ues=K, population=N)
+    dense = ctl.ControlState(
+        policy_id=np.zeros(R, np.int32),
+        sizes=rng.uniform(100, 3000, (R, N)),
+        divs=rng.uniform(0, 1, (R, N)),
+        r_min=rng.uniform(1e4, 1e7, (R, N)),
+        reputations=rng.uniform(0, 1, (R, N)),
+        ages=np.ones((R, N)), cfg=cfg)
+    ps = pop.PopulationState.from_control(dense, t=0)
+    assert np.all(ps.last_sel == -1)            # dense ages started at 1
+    for t in range(4):
+        np.testing.assert_array_equal(ps.ages(t), dense.ages)
+        sels, als, ats, pens = [], [], [], []
+        for i in range(R):
+            sel = rng.choice(N, size=rng.integers(0, K), replace=False)
+            sels.append(sel)
+            als.append(rng.uniform(0, 1, sel.size))
+            ats.append(rng.uniform(0, 1, sel.size))
+            pens.append(rng.uniform(0, 0.01, sel.size) if i % 2 else None)
+        ctl.finalize_runs(dense, sels, als, ats, penalties=pens,
+                          kernel="hybrid")
+        pop.scatter_finalize(ps, t, sels, als, ats, penalties=pens)
+        np.testing.assert_array_equal(ps.reputations, dense.reputations)
+    np.testing.assert_array_equal(ps.ages(4), dense.ages)
+
+
+def test_control_view_shares_buffers():
+    """control_view is a zero-copy scheduling view: reputations are the
+    SAME buffer, ages are materialized for the requested round."""
+    _, state, *_ = _instance(3, 6, 24)
+    ps = pop.PopulationState.from_control(state, t=2)
+    cv = ps.control_view(t=2)
+    assert cv.reputations is ps.reputations
+    np.testing.assert_array_equal(cv.ages, state.ages)
+    assert ps.n_population == 24 and ps.n_runs == state.n_runs
+    assert ps.nbytes() > 0
+    assert pop.bytes_per_device(ps, 2) < ps.nbytes()
+
+
+def test_population_config_contract():
+    cfg = FeelConfig(n_ues=10)
+    assert cfg.n_population == 10                 # legacy N == K
+    assert FeelConfig(n_ues=10, population=40).n_population == 40
+    with pytest.raises(AssertionError):
+        FeelConfig(n_ues=10, population=5).n_population
+    assert pop.default_m(FeelConfig(n_ues=10, population=1000)) == 80
+    assert pop.default_m(FeelConfig(n_ues=10, population=40)) == 40
+
+
+# ---------------------------------------------------------------------- #
+# N == K pinning + end-to-end population runs
+# ---------------------------------------------------------------------- #
+KW = dict(n_train=2500, n_test=300, rounds=2)
+
+
+def test_population_equal_k_is_legacy_regime():
+    """population=n_ues must reproduce population=None bit-for-bit: same
+    RNG streams, same schedules (the prefilter delegates at M >= N),
+    same curves."""
+    from repro.federated.simulation import run_experiment
+    a = run_experiment(policy="dqs", seed=0, **KW)
+    b = run_experiment(policy="dqs", seed=0, population=50, **KW)
+    assert a["acc"] == b["acc"]
+    assert a["malicious"] == b["malicious"]
+    assert a["objective"] == b["objective"]
+
+
+def test_population_cut_end_to_end():
+    """N > K: the sweep schedules over all N candidates through the
+    prefilter, trains only the scheduled cohorts, and matches its
+    sequential run_experiment twin exactly."""
+    from repro.federated.simulation import run_experiment, run_sweep
+    r = run_experiment(policy="dqs", seed=0, population=120, **KW)
+    assert np.isfinite(r["acc"]).all()
+    res = run_sweep(["dqs"], seeds=[0], population=120, **KW)
+    assert res.select(policy="dqs", seed=0)[0]["acc"] == r["acc"]
+
+
+# ---------------------------------------------------------------------- #
+# Mesh plumbing (launch.mesh + sharding.specs revival)
+# ---------------------------------------------------------------------- #
+def test_mesh_helpers_single_device():
+    import jax
+    from jax.sharding import NamedSharding
+
+    mesh = pop.population_mesh()
+    assert mesh.axis_names == ("data", "model")
+    arr = np.arange(12.0).reshape(3, 4)
+    sharded = pop.shard_population(mesh, arr)
+    assert isinstance(sharded.sharding, NamedSharding)
+    np.testing.assert_array_equal(np.asarray(sharded), arr)
+
+
+_MESH_PARITY = r"""
+import numpy as np, jax
+from tests.test_population import _instance
+from repro.core import control as ctl
+from repro.core import population as pop
+
+assert len(jax.devices()) == 2
+mesh = pop.population_mesh()
+assert mesh.devices.size == 2
+cfg, state, gains, rand_rank, omega = _instance(11, 8, 160)
+exact = ctl.schedule_runs(state, gains, rand_rank, *omega,
+                          kernel="hybrid")
+x, _, costs, _, forced, info = pop.prefilter_schedule_runs(
+    state, gains, rand_rank, *omega, m=32, kernel="jax", mesh=mesh)
+np.testing.assert_array_equal(x, exact[0])
+np.testing.assert_array_equal(costs, exact[2])
+np.testing.assert_array_equal(forced, exact[4])
+print("MESH-PARITY-OK")
+"""
+
+
+def test_prefilter_sharded_mesh_parity():
+    """Forced 2-device host mesh (subprocess: conftest pins no XLA_FLAGS
+    in-process): the GSPMD-sharded prefilter kernel still selects the
+    exact cohort."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-c", _MESH_PARITY], capture_output=True,
+        text=True, timeout=600,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+             "PYTHONPATH": os.pathsep.join(
+                 [os.path.join(root, "src"), os.path.join(root, "tests"),
+                  root, os.environ.get("PYTHONPATH", "")])})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MESH-PARITY-OK" in r.stdout
