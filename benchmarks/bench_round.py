@@ -119,7 +119,7 @@ def _bench_meta():
             .isoformat(timespec="seconds")}
 
 
-def write_bench_json(name, payload, canonical=True):
+def write_bench_json(name, payload, canonical=True, results_dir=None):
     """The ONE writer for results/BENCH_<name>.json.
 
     Shared schema: {"bench": ..., "meta": _bench_meta(), **payload}. A
@@ -131,13 +131,19 @@ def write_bench_json(name, payload, canonical=True):
     (the meta block carries commit, python/jax/numpy versions and a UTC
     timestamp), so re-running any bench on a new commit grows per-bench
     perf history instead of overwriting it.
+
+    ``results_dir`` overrides the repo results/ directory (tests). The
+    caller's ``payload`` dict is never mutated (tests/test_bench_writer.py
+    regression: the old code popped "bench" out of the caller's dict).
     """
     if not canonical:
         print(f"# non-canonical sizes; results/BENCH_{name}.json left "
               "untouched", file=sys.stderr)
         return
-    results = os.path.join(os.path.dirname(__file__), "..", "results")
+    results = results_dir or os.path.join(os.path.dirname(__file__), "..",
+                                          "results")
     path = os.path.join(results, f"BENCH_{name}.json")
+    payload = dict(payload)
     record = {"bench": payload.pop("bench", name),
               "meta": _bench_meta(), **payload}
     with open(path, "w") as f:
@@ -434,6 +440,57 @@ for n_mal in n_mals:
 print(json.dumps({"rows": rows_out}))
 """
 
+_ASYNC_WORKER = r"""
+import json, sys, time
+import numpy as np
+from repro.configs.base import FeelConfig
+from repro.launch.serve import simulate
+
+mode, scenario, k, n_train, n_test, rounds = (
+    sys.argv[1], sys.argv[2], int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]), int(sys.argv[6]))
+cfg = FeelConfig(n_ues=k, n_malicious=max(k // 8, 1),
+                 min_selected=min(5, k))
+kw = dict(cfg=cfg, scenario=scenario, rounds=rounds, n_train=n_train,
+          n_test=n_test, seed=0)
+
+# parity gate in EVERY timed cell: the zero-latency async engine must be
+# bit-equal to the synchronous oracle (DESIGN.md S13) before the cell's
+# timing is trusted
+sync = simulate(mode="sync", **kw)
+zero = simulate(mode="async", buffer=None, deadline=None,
+                latency_scale=0.0, **kw)
+for f in ("acc", "rep_gap", "objective"):
+    a, b = np.asarray(sync[f], float), np.asarray(zero[f], float)
+    assert np.array_equal(a, b, equal_nan=True), \
+        f"zero-latency async != sync on {f}"
+
+if mode == "sync":
+    # the lockstep limit, but event-priced: full-wave triggers at real
+    # Eq. 6/7 latencies give the synchronous baseline a sim-time axis
+    spec = dict(buffer=None, deadline=None, latency_scale=1.0)
+elif mode == "async_buffer":
+    spec = dict(buffer=max(2, k // 8), deadline=None, latency_scale=1.0,
+                staleness=0.5, channel_corr=0.3)
+elif mode == "async_deadline":
+    spec = dict(buffer=None, deadline=60.0, latency_scale=1.0,
+                staleness=0.5, channel_corr=0.3)
+else:
+    raise KeyError(mode)
+t0 = time.perf_counter()
+res = simulate(mode="async", **spec, **kw)
+wall = time.perf_counter() - t0
+assert np.isfinite(np.asarray(res["acc"], float)).all()
+st = np.asarray(res["sim_time"], float)
+assert st.size == rounds and np.all(np.diff(st) >= 0), st
+print(json.dumps({"acc": res["acc"], "sim_time": res["sim_time"],
+                  "trigger": res["trigger"],
+                  "n_uploads": res["n_uploads"],
+                  "mean_age": res["mean_age"], "wall_s": wall,
+                  "final_acc": res["acc"][-1]}))
+"""
+
+
 # engine CLI name -> (FeelServer engine, n_buckets override or None)
 ENGINES = {"loop": ("loop", None),
            "vectorized": ("vectorized", None),
@@ -641,6 +698,42 @@ def bench_defenses(ks=DEFENSE_KS, n_mals=DEFENSE_NMALS, reps=10,
             canonical=(tuple(ks) == DEFENSE_KS
                        and tuple(n_mals) == DEFENSE_NMALS))
     return rows
+
+
+ASYNC_DEFAULTS = (16, 8000, 800, 8)   # k, n_train, n_test, rounds
+
+
+def bench_async(k=16, n_train=8000, n_test=800, rounds=8,
+                scenarios=("none", "stale_rider_2"), write_json=True):
+    """Async engine plane: accuracy vs SIMULATED wall-clock for the
+    {sync, async-buffer, async-deadline} triggers crossed with threat
+    scenarios (federated/async_engine.py, DESIGN.md S13). Every cell's
+    worker first pins the zero-latency parity gate (mode="async" at
+    latency_scale=0 bit-equal to mode="sync") and only then times the
+    cell; the "sync" cell itself is the event-priced lockstep limit, so
+    all three curves share one simulated-clock axis. The JSON artifact
+    (results/BENCH_async.json) is only written for the canonical default
+    sizes."""
+    print("async,mode,scenario,rounds,sim_s,final_acc,mean_age,wall_s")
+    cells = []
+    for scn in scenarios:
+        for mode in ("sync", "async_buffer", "async_deadline"):
+            out = _run_worker(_ASYNC_WORKER,
+                              [mode, scn, k, n_train, n_test, rounds])
+            cells.append({"mode": mode, "scenario": scn, **out})
+            print(f"async,{mode},{scn},{rounds},{out['sim_time'][-1]:.1f},"
+                  f"{out['final_acc']:.4f},"
+                  f"{float(np.mean(out['mean_age'])):.2f},"
+                  f"{out['wall_s']:.1f}", flush=True)
+    if write_json:
+        write_bench_json(
+            "async",
+            {"bench": "async_engine_acc_vs_sim_time",
+             "K": k, "n_train": n_train, "n_test": n_test,
+             "rounds": rounds, "cells": cells},
+            canonical=((k, n_train, n_test, rounds) == ASYNC_DEFAULTS
+                       and tuple(scenarios) == ("none", "stale_rider_2")))
+    return cells
 
 
 _POPULATION_WORKER = r"""
@@ -1004,6 +1097,13 @@ def smoke():
             and pop_rows[0]["prefilter_jax_ms"] > 0
             and pop_rows[0]["prefilter_tail_ms"] > 0)
     assert pop_mesh and pop_mesh[0]["devices"] == 2, pop_mesh
+    # async plane: every cell's worker runs the zero-latency parity gate
+    # (async == sync bitwise) before timing — that assertion is the gate
+    async_cells = bench_async(k=8, n_train=2000, n_test=300, rounds=2,
+                              scenarios=("stale_rider_2",),
+                              write_json=False)
+    assert len(async_cells) == 3 and all(
+        np.isfinite(c["final_acc"]) for c in async_cells), async_cells
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
           f"control speedup {ctl_rows[0]['speedup']:.2f}x, "
@@ -1061,12 +1161,21 @@ def main():
                          "schedule vs the top-M prefilter at N in "
                          "{1e4,1e5,1e6} plus the sharded-mesh jax "
                          "re-bench; writes results/BENCH_population.json")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="benchmark the async event engine: accuracy vs "
+                         "simulated wall-clock for {sync, async-buffer, "
+                         "async-deadline} x scenarios with a zero-latency "
+                         "parity gate per cell; writes "
+                         "results/BENCH_async.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny asserted run of every benchmark (CI gate)")
     args = ap.parse_args()
 
     if args.smoke:
         smoke()
+        return
+    if args.async_:
+        bench_async(*ASYNC_DEFAULTS)
         return
     if args.population:
         bench_population()

@@ -58,8 +58,12 @@ SIM_DIRS = ("core", "federated", "data", "kernels", "models")
 # np.random constructors that are deterministic WHEN given a seed
 _SEEDED_CTORS = {"default_rng", "RandomState", "SeedSequence", "PCG64",
                  "Philox", "SFC64", "MT19937"}
+# "sleep" rides along: a sleep in simulation code means something is
+# waiting on the wall clock — the async engine's event clock
+# (federated/async_engine.py) must advance ONLY through the Eq. 6/7
+# latency model on seeded draws
 _CLOCK_FUNCS = {"time", "perf_counter", "monotonic", "time_ns",
-                "perf_counter_ns", "monotonic_ns"}
+                "perf_counter_ns", "monotonic_ns", "sleep"}
 _SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
 
 
@@ -263,7 +267,9 @@ def lint_nondeterminism(src: SourceFile) -> List[Violation]:
                 or (len(parts) == 1 and parts[0] in clock_funcs):
             _violate(out, src, "nondeterminism", node.lineno,
                      f"wall clock `{callee}()` in simulation code — "
-                     "results must be a function of config + seeds")
+                     "results must be a function of config + seeds (the "
+                     "async engine's event clock advances only through "
+                     "the Eq. 6/7 latency model on seeded draws)")
         elif parts[-1] in ("now", "utcnow", "today") and (
                 (len(parts) >= 2 and parts[0] in dt_mods)
                 or (len(parts) >= 2

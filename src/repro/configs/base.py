@@ -301,6 +301,34 @@ class FeelConfig:
     # via ``run_sweep(tasks=[...])``; the batched control plane treats
     # configs differing only in ``task`` as compatible (core/control.py).
     task: str = "mnist_mlp"
+    # --- execution mode (federated/async_engine.py, DESIGN.md §13) ---
+    # "sync" runs Alg. 1 as lockstep rounds; "async" runs the
+    # event-driven engine: each scheduled UE's upload arrives at a
+    # simulated per-UE time from the Eq. 6/7 latency model, the server
+    # aggregates on a buffer/deadline trigger with staleness-discounted
+    # weights, and the next wave is dispatched right after each
+    # aggregation (cohort selection overlaps in-flight training).
+    mode: str = "sync"
+    # aggregate once this many uploads are buffered; None waits for every
+    # in-flight upload (the synchronous lockstep limit)
+    async_buffer: Optional[int] = None
+    # also aggregate at dispatch_time + deadline sim-seconds with whatever
+    # has arrived (None = no deadline trigger)
+    async_deadline: Optional[float] = None
+    # staleness-discount base (core/control.py::staleness_discount): an
+    # upload computed on a model ``a`` aggregations old weighs
+    # sizes * async_staleness**a. a = 0 gives exactly 1.0 — the FedAvg
+    # weight, bit-for-bit — which is what makes the synchronous engine
+    # the zero-latency oracle.
+    async_staleness: float = 0.5
+    # scales every simulated upload latency; 0.0 is the zero-latency
+    # oracle limit where mode="async" must reproduce mode="sync" exactly
+    async_latency_scale: float = 1.0
+    # AR(1)/Gauss-Markov small-scale fading correlation rho across
+    # consecutive channel draws (core/wireless.py): 0.0 keeps the legacy
+    # memoryless Rayleigh draw bit-for-bit; rho in (0, 1) gives each UE
+    # persistent block-fading state with stationary |h|^2 ~ Exp(1).
+    channel_corr: float = 0.0
     # client compute model (Eq. 6). zeta/f are unspecified in the paper;
     # calibrated so t_train spans [~1s, ~375s] against T=300s — large datasets
     # on slow UEs can blow the deadline, which is exactly the paper's

@@ -396,3 +396,19 @@ def finalize_runs(state: ControlState, sels: List[np.ndarray],
     # and these buffers are written in-place by the next round's pull()
     state.reputations = np.array(rep)
     state.ages = np.array(ages)
+
+
+def staleness_discount(ages: np.ndarray, decay: float) -> np.ndarray:
+    """Staleness discount d(a) = decay**a for the async engine (DESIGN.md §13).
+
+    ``ages`` — integer aggregation ages (aggregation_version minus the
+    model version the update was computed on), all >= 0. ``decay`` in
+    (0, 1] is ``cfg.async_staleness``. Host float64 like the rest of the
+    control plane. d(0) == 1.0 *exactly* (any IEEE base to the 0th power),
+    so an age-0 upload's weight ``w * d(0)`` is bit-identical to the
+    FedAvg weight — the zero-latency parity contract rests on this.
+    """
+    ages = np.asarray(ages)
+    assert 0.0 < decay <= 1.0, f"async_staleness must be in (0, 1]: {decay}"
+    assert np.all(ages >= 0), "negative staleness age"
+    return np.asarray(decay, np.float64) ** ages.astype(np.float64)

@@ -54,6 +54,13 @@ elementwise Eq. 2/3/9 math and the top-M cut are population-parallel,
 only the M-sized tail is sequential. ``bench_round --population``
 measures both paths at N ∈ {10^4, 10^5, 10^6}
 (results/BENCH_population.json), asserting prefilter == exact per cell.
+
+Channel state is per-UE and N-wide but lives in ``core.wireless``
+(``WirelessModel`` already spans the full candidate population): with
+``cfg.channel_corr`` > 0 each candidate carries a persistent AR(1)
+block-fading state across rounds (DESIGN.md §13) instead of the legacy
+memoryless per-round redraw — closing the PR 8 follow-up that channel
+statistics had no temporal state.
 """
 from __future__ import annotations
 

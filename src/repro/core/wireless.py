@@ -66,11 +66,36 @@ class WirelessModel:
         self.distances = np.maximum(np.linalg.norm(xy, axis=1), 1.0)
         self.p_watt = cfg.p_watt
         self.n0 = cfg.n0_watt_hz     # W/Hz
+        # AR(1)/Gauss-Markov fading state (DESIGN.md §13): complex h per
+        # candidate, components N(0, 1/2) so |h|^2 is stationary Exp(1).
+        # Only touched when cfg.channel_corr > 0 — the rho = 0 path keeps
+        # the legacy memoryless exponential draw bit-for-bit.
+        self._h: Optional[np.ndarray] = None       # (N, 2) re/im
+        self.last_gains: Optional[np.ndarray] = None
 
     def draw_channels(self) -> ChannelState:
-        """Rayleigh |h|^2 ~ Exp(1); gains = d^-alpha |h|^2."""
-        h2 = self.rng.exponential(1.0, size=self.distances.shape)
+        """Rayleigh |h|^2 ~ Exp(1); gains = d^-alpha |h|^2.
+
+        With ``cfg.channel_corr = rho > 0`` the small-scale component is a
+        per-UE Gauss-Markov process ``h_t = rho h_{t-1} + sqrt(1-rho^2) w_t``
+        (w complex, components N(0, 1/2)): stationary |h|^2 ~ Exp(1) as in
+        the memoryless model, lag-1 correlation of |h|^2 equal to rho^2.
+        rho = 0 (the default) draws the exact legacy exponential variate so
+        existing goldens pin bit-for-bit.
+        """
+        rho = self.cfg.channel_corr
+        if rho == 0.0:
+            h2 = self.rng.exponential(1.0, size=self.distances.shape)
+        else:
+            w = self.rng.standard_normal(self.distances.shape + (2,)) \
+                * np.sqrt(0.5)
+            if self._h is None:
+                self._h = w
+            else:
+                self._h = rho * self._h + np.sqrt(1.0 - rho * rho) * w
+            h2 = (self._h ** 2).sum(axis=-1)
         gains = self.distances ** (-self.cfg.pathloss_exp) * h2
+        self.last_gains = gains
         return ChannelState(gains=gains, distances=self.distances)
 
     # ------------------------------------------------------------------ #

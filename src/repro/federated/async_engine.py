@@ -1,0 +1,283 @@
+"""Event-driven asynchronous FEEL engine (DESIGN.md §13, ROADMAP item 3).
+
+The synchronous engine runs Alg. 1 as lockstep rounds: every scheduled UE's
+upload lands before the next schedule is drawn. Real edge fleets trickle
+in — the paper's own Eq. 5-7 cost model already prices a *per-UE* latency
+(train time from the cycles/bit model + transmission time at the allocated
+bandwidth fraction), the synchronous engine just never uses it as a clock.
+This engine does:
+
+    dispatch  — draw the next wave's schedule (the server's own
+        ``_schedule_round``: either control plane, any policy) over the
+        UEs with no upload in flight, train the whole wave at once from
+        the CURRENT global params (the vectorized cohort engine is
+        reused verbatim), and push one arrival event per scheduled UE at
+        ``t_sim + latency`` where latency = (Eq. 6 train time + Eq. 7
+        upload time at the wave's Eq. 9 bandwidth split) scaled by
+        ``cfg.async_latency_scale``.
+    arrive    — pop events in (arrival_time, dispatch_seq) order into the
+        aggregation buffer, advancing the simulated clock.
+    aggregate — on a trigger (buffer fill / deadline / drain, see below),
+        FedAvg the buffered uploads with staleness-discounted weights
+        ``sizes * decay**age`` (core/control.py::staleness_discount),
+        where age = current aggregation version minus the version the
+        upload was computed on. Aggregation bumps the model version,
+        finalizes Eq. 1 reputation for exactly the aggregated UEs, logs a
+        RoundLog, and immediately dispatches the next wave — cohort
+        selection overlaps the still-in-flight training of earlier waves.
+
+Triggers: ``cfg.async_buffer = B`` aggregates as soon as B uploads are
+buffered; ``cfg.async_deadline = d`` also flushes a non-empty buffer at
+dispatch_time + d sim-seconds; ``async_buffer=None`` waits for every
+in-flight upload (the synchronous lockstep limit). A non-empty buffer
+with an empty event heap and no deadline flushes as a "drain".
+
+Busy masking: a UE with an upload in flight (heap or buffer) must not be
+re-scheduled. Its channel gain is zeroed for the schedule draw
+(``FeelServer._mask_unavailable`` — an arithmetic mask, not an RNG op, so
+the host stream of record is untouched): zero gain makes Eq. 9 infeasible
+(cost K+1) and every channel-aware packing skips it. Channel-blind
+selections (``top_value``, the forced-round rewrite) are post-filtered on
+the busy mask at dispatch.
+
+Zero-latency oracle discipline (the engine's parity contract, pinned by
+tests/test_async.py): at ``async_latency_scale = 0.0`` with per-wave
+triggers (``async_buffer=None``, no deadline) every wave's uploads arrive
+instantly in dispatch order — the event ordering key is (arrival_time,
+dispatch_seq), so ties resolve to selection order — ages are all 0 where
+``decay**0 == 1.0`` exactly, and each aggregation sees the same stacks
+and weights bit-for-bit as the synchronous engine's round. mode="async"
+then reproduces mode="sync" exactly, for both data engines, both control
+planes and both tasks — the same oracle discipline as engine="loop" and
+control="host".
+
+The event clock is SIMULATED: it advances only by the Eq. 6/7 latency
+model on seeded channel/compute draws. Wall-clock reads
+(time.time/perf_counter/...) in this module are repro.check
+nondeterminism violations (check/lints.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control as ctl
+from repro.federated import cohort
+from repro.federated.server import FeelServer, RoundLog
+
+
+@dataclasses.dataclass
+class _Upload:
+    """One in-flight upload: which UE, which dispatch wave produced it,
+    which model version it was computed on, and its per-UE results."""
+    ue: int
+    wave: int
+    version: int            # aggregation version of the params it trained on
+    row: int                # row within the wave's stored uploads
+    latency: float          # sim-seconds from dispatch to arrival
+    acc_local: float
+    acc_test: float
+    acc_val: Optional[np.ndarray]   # (2,) detector column, None without one
+
+
+@dataclasses.dataclass
+class AggregationLog:
+    """Per-aggregation async metadata, alongside the server's RoundLog."""
+    version: int
+    sim_time: float
+    trigger: str            # 'wave' | 'buffer' | 'deadline' | 'drain'
+    n_uploads: int
+    ages: np.ndarray        # (n,) int staleness ages of the aggregated uploads
+    discounts: np.ndarray   # (n,) staleness discounts applied to the weights
+    waves: np.ndarray       # (n,) dispatch wave of each aggregated upload
+
+
+class AsyncFeelEngine:
+    """Drives a ``FeelServer`` through the event loop above. ``rounds``
+    counts *aggregations* (model versions), the async analogue of rounds."""
+
+    def __init__(self, server: FeelServer):
+        assert server.cfg.mode == "async", \
+            f"AsyncFeelEngine requires cfg.mode='async', got {server.cfg.mode!r}"
+        cfg = server.cfg
+        assert cfg.async_buffer is None or cfg.async_buffer >= 1, \
+            cfg.async_buffer
+        assert cfg.async_latency_scale >= 0.0, cfg.async_latency_scale
+        self.server = server
+        self.t_sim = 0.0                 # simulated clock (sim-seconds)
+        self.version = 0                 # aggregations done == model version
+        self.wave = 0                    # dispatches done
+        self._seq = 0                    # global dispatch counter (tie-break)
+        self._heap: List[Tuple[float, int, _Upload]] = []
+        self._buffer: List[_Upload] = []
+        # wave -> {"uploads", "weights", "left"}: a wave's trained stack is
+        # kept until its last upload is aggregated (refcounted)
+        self._store: Dict[int, Dict] = {}
+        self._busy = np.zeros(cfg.n_population, bool)
+        # latest dispatched plan — the schedule context the next RoundLog
+        # reports (values/sched/forced of the most recent wave)
+        self._plan = None
+        self._dispatch_t = 0.0
+        # Eq. 6 train times are round-invariant (sizes and cpu draws fixed)
+        self._t_train = server.wireless.train_time(server.sizes,
+                                                   server.cpu_hz)
+        self.agg_logs: List[AggregationLog] = []
+
+    # ------------------------------------------------------------------ #
+    def _dispatch(self) -> None:
+        """Schedule + train the next wave over the non-busy UEs and push
+        its arrival events."""
+        srv = self.server
+        srv.unavailable = self._busy.copy() if self._busy.any() else None
+        try:
+            values, sched, sel, forced = srv._schedule_round(self.wave)
+        finally:
+            srv.unavailable = None
+        # channel-blind selections (top_value, the forced rewrite) ignore
+        # the zeroed gains — drop busy UEs here
+        sel = sel[~self._busy[sel]]
+        self._plan = (values, sched, forced)
+        self._dispatch_t = self.t_sim
+        wave = self.wave
+        self.wave += 1
+        if sel.size == 0:
+            return
+        uploads, weights, acc_local, acc_test, acc_val = \
+            srv._train_cohort(sel, wave)
+        gains = srv.wireless.last_gains
+        lat = (self._t_train[sel]
+               + srv.wireless.upload_time(gains, sched.alpha)[sel]) \
+            * srv.cfg.async_latency_scale
+        assert np.all(np.isfinite(lat)), \
+            "non-finite upload latency for a scheduled UE"
+        self._store[wave] = {"uploads": uploads, "weights": weights,
+                             "left": sel.size}
+        self._busy[sel] = True
+        for i, ue in enumerate(sel):
+            e = _Upload(ue=int(ue), wave=wave, version=self.version, row=i,
+                        latency=float(lat[i]),
+                        acc_local=float(acc_local[i]),
+                        acc_test=float(acc_test[i]),
+                        acc_val=(None if acc_val is None
+                                 else np.asarray(acc_val[:, i])))
+            heapq.heappush(self._heap, (self.t_sim + e.latency, self._seq, e))
+            self._seq += 1
+
+    # ------------------------------------------------------------------ #
+    def _gather(self, entries: List[_Upload]):
+        """(uploads, weights) of the buffered entries in arrival order,
+        weights staleness-discounted. At zero latency this reduces to the
+        identity gather on the single wave's stack — bit-equal inputs to
+        the synchronous aggregation."""
+        srv = self.server
+        ages = np.array([self.version - e.version for e in entries])
+        disc = ctl.staleness_discount(ages, srv.cfg.async_staleness)
+        if srv.engine == "loop":
+            uploads = [self._store[e.wave]["uploads"][e.row]
+                       for e in entries]
+            base = np.array([self._store[e.wave]["weights"][e.row]
+                             for e in entries], float)
+            return uploads, base * disc, ages, disc
+        # vectorized: per-wave device gather of the real rows, merged back
+        # into arrival order, re-padded to the stable row multiple
+        n = len(entries)
+        parts, w_parts, pos_parts = [], [], []
+        for w in dict.fromkeys(e.wave for e in entries):
+            pos = np.array([i for i, e in enumerate(entries)
+                            if e.wave == w])
+            rows = jnp.asarray(np.array([entries[i].row for i in pos]))
+            st = self._store[w]
+            parts.append(jax.tree.map(
+                lambda l, idx=rows: jnp.take(l, idx, axis=0),
+                st["uploads"]))
+            w_parts.append(np.asarray(st["weights"])[np.asarray(rows)])
+            pos_parts.append(pos)
+        inv = np.argsort(np.concatenate(pos_parts), kind="stable")
+        stacked = cohort.merge_stacks(parts, inv if len(parts) > 1 else None)
+        n_pad = cohort.pad_count(n, FeelServer._N_BUCKET)
+        stacked_p = cohort.pad_stacked(stacked, n_pad)
+        weights = np.zeros(n_pad)
+        weights[:n] = np.concatenate(w_parts)[inv] * disc
+        return stacked_p, weights, ages, disc
+
+    def _aggregate(self, trigger: str) -> RoundLog:
+        """Flush the buffer into the global model: staleness-discounted
+        FedAvg (or the defense plane's robust aggregator), Eq. 1
+        finalization for the aggregated UEs, RoundLog + AggregationLog."""
+        srv = self.server
+        entries, self._buffer = self._buffer, []
+        assert entries, "aggregate called with an empty buffer"
+        sel = np.array([e.ue for e in entries])
+        uploads, weights, ages, disc = self._gather(entries)
+        srv._aggregate_uploads(sel, uploads, weights)
+        for e in entries:
+            st = self._store[e.wave]
+            st["left"] -= 1
+            if st["left"] == 0:
+                del self._store[e.wave]
+        self._busy[sel] = False
+        acc_local = np.array([e.acc_local for e in entries])
+        acc_test = np.array([e.acc_test for e in entries])
+        acc_val = (None if entries[0].acc_val is None
+                   else np.stack([e.acc_val for e in entries], axis=1))
+        g_acc, g_loss, src_acc, atk_succ = srv._global_metrics()
+        values, sched, forced = self._plan
+        log = srv._finalize_round(self.version, values, sched, sel, forced,
+                                  acc_local, acc_test, g_acc, src_acc,
+                                  atk_succ, acc_val, g_loss)
+        self.agg_logs.append(AggregationLog(
+            version=self.version, sim_time=self.t_sim, trigger=trigger,
+            n_uploads=len(entries), ages=ages, discounts=disc,
+            waves=np.array([e.wave for e in entries])))
+        self.version += 1
+        return log
+
+    # ------------------------------------------------------------------ #
+    def _trigger(self) -> bool:
+        """Buffer-fill trigger: B uploads buffered, or — with
+        ``async_buffer=None`` — the whole in-flight set has arrived."""
+        if self.server.cfg.async_buffer is not None:
+            return len(self._buffer) >= self.server.cfg.async_buffer
+        return not self._heap
+
+    def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
+        """Run until ``rounds`` aggregations (default cfg.rounds) and
+        return the server's RoundLogs (one per aggregation)."""
+        cfg = self.server.cfg
+        n_agg = rounds or cfg.rounds
+        self._dispatch()
+        while self.version < n_agg:
+            deadline = (math.inf if cfg.async_deadline is None
+                        else self._dispatch_t + cfg.async_deadline)
+            if self._heap and (not self._buffer
+                               or self._heap[0][0] <= deadline):
+                t_arr, _, e = heapq.heappop(self._heap)
+                self.t_sim = max(self.t_sim, t_arr)
+                self._buffer.append(e)
+                if not self._trigger():
+                    continue
+                trig = "buffer" if cfg.async_buffer is not None else "wave"
+            elif self._buffer:
+                # next arrival (if any) is past the deadline: flush what
+                # has landed; with no deadline this is the drain case
+                if math.isfinite(deadline):
+                    self.t_sim = max(self.t_sim, deadline)
+                    trig = "deadline"
+                else:
+                    trig = "drain"
+            else:
+                # unreachable: an empty heap+buffer means no UE is busy,
+                # so the preceding dispatch scheduled at least one upload
+                # (the forced-round rewrite guarantees a non-empty,
+                # non-busy selection)
+                raise AssertionError("async engine stalled: empty event "
+                                     "heap and empty buffer")
+            self._aggregate(trig)
+            self._dispatch()
+        return self.server.logs

@@ -346,6 +346,13 @@ class FeelServer:
         # batched-control state (R=1): built lazily; the sweep runner builds
         # its own R=n_runs ControlState instead and never touches this one
         self._ctrl: Optional[ctl.ControlState] = None
+        # async-engine busy mask (federated/async_engine.py, DESIGN.md §13):
+        # when set, these UEs have an upload in flight and must not be
+        # re-scheduled — their channel gains are zeroed for the draw (an
+        # arithmetic mask, NOT an RNG op: the host stream of record is
+        # untouched), which makes Eq. 9 infeasible so packing skips them.
+        # None in synchronous mode (every round's cohort fully lands).
+        self.unavailable: Optional[np.ndarray] = None
         self.pad_waste: List[float] = []   # per-round padded/real sample ratio
         self.logs: List[RoundLog] = []
 
@@ -362,9 +369,18 @@ class FeelServer:
         return data_quality_value(self.reputation.values, I, cfg,
                                   omega=self._omega(round_t))
 
+    def _mask_unavailable(self, gains: np.ndarray) -> np.ndarray:
+        """Zero the gains of busy UEs (async in-flight uploads): a zero
+        gain makes Eq. 9 infeasible (cost K+1), so every channel-aware
+        packing skips them. Channel-blind policies (top_value, the forced
+        rewrite) are post-filtered by the async engine instead."""
+        if self.unavailable is not None:
+            gains = np.where(self.unavailable, 0.0, gains)
+        return gains
+
     def _schedule(self, values: np.ndarray) -> Schedule:
         cfg = self.cfg
-        gains = self.wireless.draw_channels().gains
+        gains = self._mask_unavailable(self.wireless.draw_channels().gains)
         t_train = self.wireless.train_time(self.sizes, self.cpu_hz)
         costs = self.wireless.cost(gains, t_train)
         if self.policy == "dqs":
@@ -382,8 +398,13 @@ class FeelServer:
         raise KeyError(self.policy)
 
     # ------------------------------------------------------------------ #
-    # Per-cohort execution engines: both return the stacked/list client
-    # results as (acc_local, acc_test, aggregate-and-assign side effect).
+    # Per-cohort execution engines: both return the round's uploads
+    # WITHOUT aggregating — (uploads, weights, acc_local, acc_test,
+    # acc_val) where ``uploads`` is a params list (loop) or the padded
+    # merged stack (vectorized) and ``weights`` the aligned FedAvg sample
+    # counts. ``run_round`` aggregates immediately (synchronous Alg. 1);
+    # the async engine banks them and aggregates on its trigger with
+    # staleness-discounted weights (federated/async_engine.py).
     # ------------------------------------------------------------------ #
     def _run_cohort_loop(self, sel: np.ndarray, t: int):
         cfg = self.cfg
@@ -435,16 +456,8 @@ class FeelServer:
                         p, self.test, m)
                     acc_val[1, i] = self.task.eval_units_loop(
                         self.params, self.test, m)
-        agg = self.defense.aggregator
-        weights = [r.n_samples for r in reports]
-        if agg is None:
-            self.params = fedavg(params_list, weights)
-            self._def_stats = dfs.DefenseStats()
-        else:
-            self.params, self._def_stats = dfs.aggregate_host(
-                agg, params_list, np.asarray(weights, float), self.params,
-                self.cfg.n_malicious)
-        return acc_local, acc_test, acc_val
+        weights = np.asarray([r.n_samples for r in reports], float)
+        return params_list, weights, acc_local, acc_test, acc_val
 
     def _ensure_cohort_data(self) -> CohortData:
         # resident on device once; per-round cohort stacking is then a
@@ -567,15 +580,26 @@ class FeelServer:
             [sel, np.full(n_pad - sel.size, len(self.clients), sel.dtype)]))
         return jnp.take(cd.mask_dev, idx, axis=0)
 
-    def _aggregate_cohort(self, sel: np.ndarray, stacked_p) -> None:
+    def _cohort_weights(self, sel: np.ndarray, stacked_p) -> np.ndarray:
+        """FedAvg sample-count weights for a padded merged stack: real rows
+        carry their dataset size, pad rows weight 0."""
+        cd = self._ensure_cohort_data()
+        weights = np.zeros(jax.tree.leaves(stacked_p)[0].shape[0])
+        weights[:sel.size] = cd.sizes[sel]
+        return weights
+
+    def _aggregate_cohort(self, sel: np.ndarray, stacked_p,
+                          weights: Optional[np.ndarray] = None) -> None:
         """ONE fedavg_stacked call whose weights span all buckets — or,
         under a defense with a robust aggregator, the batched defended
         aggregation over the padded (K_pad, P) flattened-update layout
         (core/defenses.py, DESIGN.md §9; stats land in ``_def_stats``
-        for ``_log_round``)."""
-        cd = self._ensure_cohort_data()
-        weights = np.zeros(jax.tree.leaves(stacked_p)[0].shape[0])
-        weights[:sel.size] = cd.sizes[sel]
+        for ``_log_round``). ``weights`` overrides the sample-count
+        weights (the async engine passes staleness-discounted ones);
+        None computes them — callers like the stacked sweep runner stay
+        on the 2-arg form."""
+        if weights is None:
+            weights = self._cohort_weights(sel, stacked_p)
         agg = self.defense.aggregator
         if agg is None:
             self.params = fedavg_stacked(stacked_p, weights)
@@ -615,8 +639,8 @@ class FeelServer:
             cohort.cohort_eval(self.task, stacked_p, self._ex, self._ey,
                                self._eval_masks(sel, n_pad)), float)[:n]
         acc_val = self._eval_validation(stacked_p, sel)
-        self._aggregate_cohort(sel, stacked_p)
-        return acc_local, acc_test, acc_val
+        return (stacked_p, self._cohort_weights(sel, stacked_p),
+                acc_local, acc_test, acc_val)
 
     def _val_eval_masks(self, sel: np.ndarray, n_pad: int) -> jax.Array:
         """(n_pad, T) per-UE class-masked validation-split eval masks."""
@@ -688,7 +712,7 @@ class FeelServer:
         ``random`` policy — the packing permutation. The batched kernel is
         a deterministic function of these host draws, which is what keeps
         every run's stream identical to its sequential twin."""
-        gains = self.wireless.draw_channels().gains
+        gains = self._mask_unavailable(self.wireless.draw_channels().gains)
         if self.policy == "random":
             rand_rank = np.argsort(
                 self.rng.permutation(self.cfg.n_population))
@@ -718,11 +742,31 @@ class FeelServer:
         return values[0], sched, sched.selected, bool(forced[0])
 
     def _train_cohort(self, sel: np.ndarray, t: int):
-        """(acc_local, acc_test, acc_val) of the round's cohort —
+        """(uploads, weights, acc_local, acc_test, acc_val) of the round's
+        cohort — no aggregation (see the engines' section comment);
         ``acc_val`` is None unless the defense has a validation detector."""
         if self.engine == "vectorized":
             return self._run_cohort_vectorized(sel, t)
         return self._run_cohort_loop(sel, t)
+
+    def _aggregate_uploads(self, sel: np.ndarray, uploads,
+                           weights: np.ndarray) -> None:
+        """Aggregate a cohort's uploads into ``self.params`` — the single
+        write point for both engines and both execution modes. ``uploads``
+        is whatever ``_train_cohort`` returned (params list / padded
+        stack); ``weights`` the aligned FedAvg weights, possibly
+        staleness-discounted by the async engine."""
+        if self.engine == "vectorized":
+            self._aggregate_cohort(sel, uploads, weights)
+            return
+        agg = self.defense.aggregator
+        if agg is None:
+            self.params = fedavg(uploads, list(weights))
+            self._def_stats = dfs.DefenseStats()
+        else:
+            self.params, self._def_stats = dfs.aggregate_host(
+                agg, uploads, np.asarray(weights, float), self.params,
+                self.cfg.n_malicious)
 
     def _detect(self, sel: np.ndarray, acc_val) -> Optional[np.ndarray]:
         """Validation-detector phase: anomaly scores -> Eq. 1 trust
@@ -803,13 +847,17 @@ class FeelServer:
 
     def run_round(self, t: int) -> RoundLog:
         values, sched, sel, forced = self._schedule_round(t)
-        acc_local, acc_test, acc_val = self._train_cohort(sel, t)
+        uploads, weights, acc_local, acc_test, acc_val = \
+            self._train_cohort(sel, t)
+        self._aggregate_uploads(sel, uploads, weights)
         g_acc, g_loss, src_acc, atk_succ = self._global_metrics()
         return self._finalize_round(t, values, sched, sel, forced,
                                     acc_local, acc_test, g_acc, src_acc,
                                     atk_succ, acc_val, g_loss)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
+        assert self.cfg.mode == "sync", \
+            "mode='async' runs through federated.async_engine.AsyncFeelEngine"
         for t in range(rounds or self.cfg.rounds):
             self.run_round(t)
         return self.logs

@@ -61,6 +61,7 @@ from repro.core import population
 from repro.core.poisoning import pick_malicious
 from repro.core.scheduler import Schedule
 from repro.federated import cohort
+from repro.federated.async_engine import AsyncFeelEngine
 from repro.federated.server import FeelServer, build_cohort_data
 from repro.federated.task import FeelTask, as_task
 
@@ -147,8 +148,15 @@ def run_experiment(policy: str = "dqs",
                         adaptive_omega=adaptive_omega, scenario=scn,
                         engine=engine, control=control, defense=defense,
                         task=tsk)
-    logs = server.run(rounds)
-    return {
+    if cfg.mode == "async":
+        # event-driven engine (federated/async_engine.py, DESIGN.md §13):
+        # one RoundLog per aggregation, plus the simulated-clock extras
+        eng = AsyncFeelEngine(server)
+        logs = eng.run(rounds)
+    else:
+        eng = None
+        logs = server.run(rounds)
+    out = {
         "task": tsk.name,
         "scenario": scn.name,
         "defense": server.defense.name,
@@ -172,6 +180,14 @@ def run_experiment(policy: str = "dqs",
             server.reputation.values, malicious))),
         "malicious": malicious.tolist(),
     }
+    if eng is not None:
+        out.update({
+            "sim_time": [a.sim_time for a in eng.agg_logs],
+            "trigger": [a.trigger for a in eng.agg_logs],
+            "n_uploads": [a.n_uploads for a in eng.agg_logs],
+            "mean_age": [float(np.mean(a.ages)) for a in eng.agg_logs],
+        })
+    return out
 
 
 # ---------------------------------------------------------------------- #
@@ -488,7 +504,14 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
                                               jnp.asarray(ty_target)))
 
     n_rounds = rounds or cfg.rounds
-    if stack_runs and engine == "vectorized":
+    if cfg.mode == "async":
+        # event-driven mode: every run gets its own event loop (waves are
+        # per-run decisions, so rounds cannot interleave across runs), but
+        # the whole (scenario x defense x policy) grid still shares the
+        # dataset/partition/cohort caches built above
+        for run in runs:
+            AsyncFeelEngine(run.server).run(n_rounds)
+    elif stack_runs and engine == "vectorized":
         # sweep-wide control state: ONE vmapped schedule / reputation
         # kernel call per round for ALL runs — of every task
         # (core/control.py; the control plane is model-free)

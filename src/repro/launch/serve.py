@@ -1,72 +1,126 @@
-"""Serving launcher: prefill a batch of requests, then batched greedy decode.
+"""Async FEEL simulation driver (ROADMAP item 3, DESIGN.md §13).
 
-    python -m repro.launch.serve --arch starcoder2-15b --smoke \
-        --batch 4 --prompt-len 32 --gen 32 --host-mesh
+This module used to be the seed's big-model decode launcher — dead code on
+the ``repro.check`` dead-inheritance inventory since the FEEL reproduction
+never served a model. It is now the command-line driver for the
+event-driven engine (federated/async_engine.py): configure an async run
+(trigger, staleness discount, latency scale, channel correlation), run it
+through ``run_experiment``, and report accuracy against the SIMULATED
+wall-clock — the axis the synchronous engine cannot produce.
+
+    python -m repro.launch.serve --rounds 8 --buffer 4 --scenario \\
+        stale_rider_2 --defense validation
+    python -m repro.launch.serve --sync          # lockstep oracle run
+    python -m repro.launch.serve --json          # machine-readable output
+
+The clock is simulated (Eq. 6 train time + Eq. 7 upload time on seeded
+draws) — the driver never reads the wall clock, so a run is a pure
+function of its flags + seed.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
+import json
+import sys
+from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs import get, reduced
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import api
+from repro.configs.base import FeelConfig
+from repro.federated.simulation import run_experiment
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--host-mesh", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+def simulate(policy: str = "dqs", task: Optional[str] = None,
+             scenario: str = "none", defense: str = "none",
+             seed: int = 0, rounds: Optional[int] = None,
+             n_train: Optional[int] = None, n_test: Optional[int] = None,
+             mode: str = "async", buffer: Optional[int] = None,
+             deadline: Optional[float] = None, staleness: float = 0.5,
+             latency_scale: float = 1.0, channel_corr: float = 0.0,
+             cfg: Optional[FeelConfig] = None, **kw) -> Dict:
+    """One driver run: an async (or ``mode="sync"`` oracle) experiment
+    with the trigger/staleness/latency knobs mapped onto ``FeelConfig``.
+    Returns ``run_experiment``'s curves (async runs add ``sim_time`` /
+    ``trigger`` / ``n_uploads`` / ``mean_age``)."""
+    cfg = dataclasses.replace(
+        cfg or FeelConfig(), mode=mode, async_buffer=buffer,
+        async_deadline=deadline, async_staleness=staleness,
+        async_latency_scale=latency_scale, channel_corr=channel_corr,
+        **({"task": task} if task is not None else {}))
+    return run_experiment(policy=policy, cfg=cfg, seed=seed, rounds=rounds,
+                          n_train=n_train, n_test=n_test, scenario=scenario,
+                          defense=defense, **kw)
 
-    cfg = get(args.arch)
-    if args.smoke:
-        cfg = dataclasses.replace(reduced(cfg), dtype="float32")
-    if cfg.is_encoder_decoder:
-        raise SystemExit("serve launcher targets decoder LMs; see tests for "
-                         "the enc-dec decode path")
-    mesh = (make_host_mesh() if args.host_mesh
-            else make_production_mesh())
 
-    B, Pn, G = args.batch, args.prompt_len, args.gen
-    total = Pn + G
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (B, Pn)).astype(np.int32)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="event-driven FEEL simulation (accuracy vs simulated "
+                    "wall-clock)")
+    ap.add_argument("--policy", default="dqs")
+    ap.add_argument("--task", default=None,
+                    help="task registry name (default: cfg.task)")
+    ap.add_argument("--scenario", default="none")
+    ap.add_argument("--defense", default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="aggregations to run (default: cfg.rounds)")
+    ap.add_argument("--n-train", type=int, default=None)
+    ap.add_argument("--n-test", type=int, default=None)
+    ap.add_argument("--ues", type=int, default=None,
+                    help="override cfg.n_ues (bandwidth budget K)")
+    ap.add_argument("--malicious", type=int, default=None,
+                    help="override cfg.n_malicious")
+    ap.add_argument("--sync", action="store_true",
+                    help="run the lockstep oracle engine instead")
+    ap.add_argument("--buffer", type=int, default=None,
+                    help="aggregate once this many uploads are buffered "
+                         "(default: wait for the whole wave)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="also flush the buffer at dispatch + D sim-seconds")
+    ap.add_argument("--staleness", type=float, default=0.5,
+                    help="staleness discount base decay**age (in (0, 1])")
+    ap.add_argument("--latency-scale", type=float, default=1.0,
+                    help="scale simulated upload latencies (0 = oracle limit)")
+    ap.add_argument("--channel-corr", type=float, default=0.0,
+                    help="AR(1) channel correlation rho (0 = memoryless)")
+    ap.add_argument("--json", dest="as_json", action="store_true",
+                    help="emit the full result dict as JSON on stdout")
+    args = ap.parse_args(argv)
 
-    with mesh:
-        params = api.init(cfg, jax.random.PRNGKey(0))
-        prefill = jax.jit(make_prefill_step(cfg), static_argnames=())
-        decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
-
-        t0 = time.time()
-        logits, cache = api.prefill(cfg, params,
-                                    {"tokens": jnp.asarray(prompts)},
-                                    target_len=total)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out = [tok]
-        t_prefill = time.time() - t0
-        t0 = time.time()
-        for _ in range(G - 1):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        gen = jnp.concatenate(out, 1)
-        t_decode = time.time() - t0
-    print(f"prefill {B}x{Pn}: {t_prefill*1e3:.1f} ms; "
-          f"decode {G-1} steps: {t_decode/(G-1)*1e3:.1f} ms/step")
-    print("generated (first request):", np.asarray(gen[0])[:16].tolist())
+    cfg = FeelConfig()
+    over = {}
+    if args.ues is not None:
+        over["n_ues"] = args.ues
+    if args.malicious is not None:
+        over["n_malicious"] = args.malicious
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    res = simulate(policy=args.policy, task=args.task,
+                   scenario=args.scenario, defense=args.defense,
+                   seed=args.seed, rounds=args.rounds,
+                   n_train=args.n_train, n_test=args.n_test,
+                   mode="sync" if args.sync else "async",
+                   buffer=args.buffer, deadline=args.deadline,
+                   staleness=args.staleness,
+                   latency_scale=args.latency_scale,
+                   channel_corr=args.channel_corr, cfg=cfg)
+    if args.as_json:
+        print(json.dumps(res))
+        return 0
+    sim_t = res.get("sim_time")
+    print(f"# task={res['task']} policy={args.policy} "
+          f"scenario={res['scenario']} defense={res['defense']} "
+          f"mode={'sync' if args.sync else 'async'}")
+    if sim_t is None:
+        print("round,acc")
+        for t, a in enumerate(res["acc"]):
+            print(f"{t},{a:.4f}")
+    else:
+        print("version,sim_s,acc,trigger,n_uploads,mean_age")
+        for t, a in enumerate(res["acc"]):
+            print(f"{t},{sim_t[t]:.1f},{a:.4f},{res['trigger'][t]},"
+                  f"{res['n_uploads'][t]},{res['mean_age'][t]:.2f}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

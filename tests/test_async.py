@@ -1,0 +1,198 @@
+"""Async event-driven engine (federated/async_engine.py, DESIGN.md §13).
+
+The contract under test, in order of importance:
+
+1. Zero-latency oracle parity — ``mode="async"`` at
+   ``async_latency_scale=0.0`` with per-wave triggers is BIT-EQUAL to the
+   synchronous engine, across tasks (mnist_mlp, lm_tiny), engines
+   (vectorized, loop) and control planes (batched, host) — the same
+   oracle discipline as engine="loop" / control="host".
+2. The staleness discount d(a) = decay**a: d(0) == 1.0 exactly (the
+   parity above rests on it), monotone non-increasing in age.
+3. Trigger semantics: buffer fill, deadline flush, drain.
+4. The threat/defense planes transfer: stale-replay adversaries and the
+   (scenario x defense x policy) sweep matrix run unchanged on async.
+5. The CLI driver (launch/serve.py) — whose import here also keeps the
+   module off the dead-inheritance inventory.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FeelConfig
+from repro.core import control as ctl
+from repro.federated.async_engine import AsyncFeelEngine
+from repro.federated.simulation import run_experiment, run_sweep
+from repro.launch import serve
+
+CFG = FeelConfig(n_ues=10, n_malicious=2, min_selected=3, rounds=3)
+KW = dict(n_train=1500, n_test=300, seed=0)
+LM_KW = dict(n_train=960, n_test=240, seed=0)
+
+PARITY_FIELDS = ("acc", "loss", "rep_gap", "objective",
+                 "malicious_selected")
+
+
+def _assert_parity(sync, azero):
+    for f in PARITY_FIELDS:
+        a = np.asarray(sync[f], float)
+        b = np.asarray(azero[f], float)
+        # equal_nan: the MNIST task has no loss metric (all-NaN curve)
+        assert np.array_equal(a, b, equal_nan=True), \
+            (f, sync[f], azero[f])
+
+
+def _zero_latency(cfg):
+    return dataclasses.replace(cfg, mode="async", async_buffer=None,
+                               async_deadline=None,
+                               async_latency_scale=0.0)
+
+
+# ---------------------------------------------------------------------- #
+# 1. zero-latency oracle parity
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("control", ["batched", "host"])
+def test_zero_latency_parity_mnist(control):
+    kw = dict(KW, cfg=CFG, scenario="flip_6to2", control=control)
+    sync = run_experiment(**kw)
+    azero = run_experiment(**dict(kw, cfg=_zero_latency(CFG)))
+    _assert_parity(sync, azero)
+    # the sim-time axis exists and is degenerate at zero latency
+    assert azero["sim_time"] == [0.0] * CFG.rounds
+    assert azero["trigger"] == ["wave"] * CFG.rounds
+
+
+@pytest.mark.parametrize("control", ["batched", "host"])
+def test_zero_latency_parity_lm(control):
+    cfg = dataclasses.replace(CFG, rounds=2)
+    kw = dict(LM_KW, cfg=cfg, task="lm_tiny", control=control,
+              scenario="token_flip_1to5")
+    sync = run_experiment(**kw)
+    azero = run_experiment(**dict(kw, cfg=_zero_latency(cfg)))
+    _assert_parity(sync, azero)
+
+
+def test_zero_latency_parity_loop_engine():
+    kw = dict(KW, cfg=CFG, scenario="stale_rider_2", engine="loop")
+    sync = run_experiment(**kw)
+    azero = run_experiment(**dict(kw, cfg=_zero_latency(CFG)))
+    _assert_parity(sync, azero)
+
+
+def test_zero_latency_parity_with_channel_corr():
+    """AR(1) channel state is mode-independent: sync and async-zero see
+    the same correlated draws."""
+    cfg = dataclasses.replace(CFG, channel_corr=0.4)
+    kw = dict(KW, cfg=cfg, scenario="flip_6to2")
+    sync = run_experiment(**kw)
+    azero = run_experiment(**dict(kw, cfg=_zero_latency(cfg)))
+    _assert_parity(sync, azero)
+
+
+def test_engine_rejects_sync_cfg():
+    class _Srv:
+        cfg = CFG                            # mode="sync"
+    with pytest.raises(AssertionError, match="mode"):
+        AsyncFeelEngine(_Srv())
+
+
+# ---------------------------------------------------------------------- #
+# 2. staleness discount
+# ---------------------------------------------------------------------- #
+def test_staleness_discount_monotone_age0_exact():
+    ages = np.arange(6)
+    d = ctl.staleness_discount(ages, 0.5)
+    assert d.dtype == np.float64
+    assert d[0] == 1.0                       # exact — the parity contract
+    assert np.all(np.diff(d) < 0)            # strictly decreasing, decay<1
+    w = np.array([50.0, 37.0, 123.0])
+    assert np.array_equal(w * ctl.staleness_discount(np.zeros(3, int),
+                                                     0.5), w)
+    assert np.array_equal(ctl.staleness_discount(ages, 1.0),
+                          np.ones(6))        # decay=1: plain FedAvg
+    with pytest.raises(AssertionError):
+        ctl.staleness_discount(ages, 0.0)
+    with pytest.raises(AssertionError):
+        ctl.staleness_discount(np.array([-1]), 0.5)
+
+
+# ---------------------------------------------------------------------- #
+# 3. trigger semantics
+# ---------------------------------------------------------------------- #
+def test_buffer_trigger_sizes_and_ages():
+    cfg = dataclasses.replace(CFG, mode="async", async_buffer=2,
+                              async_staleness=0.5, channel_corr=0.3,
+                              rounds=5)
+    r = run_experiment(cfg=cfg, scenario="stale_rider_2", **KW)
+    assert len(r["acc"]) == 5
+    assert np.isfinite(np.asarray(r["acc"], float)).all()
+    assert np.isfinite(np.asarray(r["rep_gap"], float)).all()
+    st = np.asarray(r["sim_time"], float)
+    assert np.all(np.diff(st) >= 0) and st[-1] > 0
+    for trig, n in zip(r["trigger"], r["n_uploads"]):
+        if trig == "buffer":
+            assert n == 2
+    # a small buffer leaves stragglers behind -> some uploads age
+    assert max(r["mean_age"]) > 0
+
+
+def test_deadline_trigger_fires():
+    # a deadline shorter than the wave's latency spread must flush
+    # partial buffers at dispatch + deadline
+    cfg = dataclasses.replace(CFG, mode="async", async_deadline=20.0,
+                              rounds=4)
+    r = run_experiment(cfg=cfg, scenario="flip_6to2", **KW)
+    assert len(r["acc"]) == 4
+    assert "deadline" in r["trigger"], r["trigger"]
+    assert np.isfinite(np.asarray(r["acc"], float)).all()
+
+
+def test_wave_trigger_is_sync_limit_shape():
+    # buffer=None waits for the whole wave: n_uploads == wave size and
+    # ages are all zero even at full latency
+    cfg = dataclasses.replace(CFG, mode="async", rounds=3)
+    r = run_experiment(cfg=cfg, scenario="flip_6to2", **KW)
+    assert r["trigger"] == ["wave"] * 3
+    assert r["mean_age"] == [0.0] * 3
+    assert np.all(np.diff(np.asarray(r["sim_time"], float)) > 0)
+
+
+# ---------------------------------------------------------------------- #
+# 4. threat/defense planes transfer
+# ---------------------------------------------------------------------- #
+def test_async_sweep_matrix():
+    """The (scenario x defense x policy) grid runs unchanged on async —
+    shared caches, per-run event loops."""
+    cfg = dataclasses.replace(CFG, mode="async", async_buffer=3,
+                              channel_corr=0.3, rounds=2)
+    res = run_sweep(["dqs"], seeds=[0], cfg=cfg,
+                    scenarios=["none", "stale_rider_2"],
+                    defenses=["none", "trimmed_mean"],
+                    n_train=KW["n_train"], n_test=KW["n_test"])
+    assert len(res.runs) == 4
+    for r in res.runs:
+        assert len(r["acc"]) == 2
+        assert np.isfinite(np.asarray(r["acc"], float)).all()
+
+
+# ---------------------------------------------------------------------- #
+# 5. the CLI driver
+# ---------------------------------------------------------------------- #
+def test_serve_cli_driver(capsys):
+    rc = serve.main(["--rounds", "2", "--ues", "10", "--malicious", "2",
+                     "--n-train", "1500", "--n-test", "300",
+                     "--buffer", "4", "--channel-corr", "0.3", "--json"])
+    assert rc == 0
+    res = json.loads(capsys.readouterr().out)
+    assert len(res["acc"]) == 2 and len(res["sim_time"]) == 2
+    assert res["scenario"] == "none"
+
+
+def test_serve_cli_table_output(capsys):
+    rc = serve.main(["--rounds", "1", "--ues", "10", "--malicious", "2",
+                     "--n-train", "1500", "--n-test", "300"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "version,sim_s,acc,trigger,n_uploads,mean_age" in out

@@ -5,7 +5,8 @@ regression (engine crash, padding-waste regression, sweep/sequential
 divergence, host/batched control-plane selection mismatch,
 masked/per-client attack-application mismatch, host/batched robust
 aggregation mismatch, LM loop/vectorized loss divergence,
-prefilter/exact population-schedule divergence) fails here
+prefilter/exact population-schedule divergence, async/sync
+zero-latency parity break) fails here
 instead of rotting silently until the next manual bench run."""
 import os
 import subprocess
@@ -56,3 +57,8 @@ def test_bench_round_smoke():
     assert any(line.startswith("population_mesh,")
                and line.split(",")[2] == "2"
                for line in r.stdout.splitlines())
+    # async plane: event-driven rows (sync/buffer/deadline cells; the
+    # zero-latency bit-parity gate is asserted inside the worker)
+    for mode in ("sync", "async_buffer", "async_deadline"):
+        assert any(line.startswith(f"async,{mode},") for line in
+                   r.stdout.splitlines()), mode

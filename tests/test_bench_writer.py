@@ -1,0 +1,58 @@
+"""Regression tests for the single bench-results writer
+(benchmarks/bench_round.py::write_bench_json).
+
+The bug under pin: the old writer ran ``payload.pop("bench", ...)`` on
+the CALLER's dict, so the first canonical write silently stripped the
+"bench" key and any second write of the same payload landed under the
+wrong record name. The writer must treat its input as read-only.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from benchmarks.bench_round import write_bench_json  # noqa: E402
+
+
+def test_payload_dict_is_not_mutated(tmp_path):
+    payload = {"bench": "writer_regression", "cells": [{"acc": 0.9}],
+               "note": "pinned"}
+    snapshot = copy.deepcopy(payload)
+    write_bench_json("writer_regression", payload,
+                     results_dir=str(tmp_path))
+    assert payload == snapshot
+    # a second write of the SAME dict must behave identically — the old
+    # pop-based writer lost "bench" here
+    write_bench_json("writer_regression", payload,
+                     results_dir=str(tmp_path))
+    assert payload == snapshot
+
+
+def test_record_schema_and_history(tmp_path):
+    payload = {"bench": "schema_probe", "cells": [1, 2, 3]}
+    write_bench_json("schema_probe", payload, results_dir=str(tmp_path))
+    with open(tmp_path / "BENCH_schema_probe.json") as f:
+        record = json.load(f)
+    assert record["bench"] == "schema_probe"
+    assert record["cells"] == [1, 2, 3]
+    assert "bench" not in record["meta"]
+    for key in ("commit", "python", "timestamp"):
+        assert key in record["meta"], record["meta"]
+    with open(tmp_path / "BENCH_history.jsonl") as f:
+        lines = f.read().splitlines()
+    assert len(lines) == 1
+    assert json.loads(lines[0])["bench"] == "schema_probe"
+
+
+def test_non_canonical_write_is_skipped(tmp_path, capsys):
+    write_bench_json("adhoc", {"bench": "adhoc"}, canonical=False,
+                     results_dir=str(tmp_path))
+    assert not os.path.exists(tmp_path / "BENCH_adhoc.json")
+    assert not os.path.exists(tmp_path / "BENCH_history.jsonl")
+    assert "non-canonical" in capsys.readouterr().err

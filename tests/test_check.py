@@ -63,6 +63,18 @@ def test_population_plane_revived_sharding_stack():
     assert not any(m.startswith("repro.sharding") for m in dead), dead
 
 
+def test_async_plane_revived_serve_launcher():
+    """The async engine (DESIGN.md §13) revived launch/serve.py from the
+    seed's dead decode launcher into the event-driven simulation driver:
+    it and the engine itself must be LIVE in the dead-inheritance
+    inventory — falling back onto the dead list means the async plane
+    silently lost its only caller."""
+    inv = run_checks().inventory
+    dead = {m["module"] for m in inv["dead"]}
+    for mod in ("repro.launch.serve", "repro.federated.async_engine"):
+        assert mod not in dead, f"{mod} regressed to dead inheritance"
+
+
 def test_cli_strict_json_report(tmp_path):
     out = tmp_path / "check_report.json"
     rc = check_main(["--strict", "--json", "--out", str(out),
@@ -197,6 +209,32 @@ def test_nondeterminism_catches_global_rng_and_clocks():
             return rng.normal(size=3)
     """)
     assert lint_nondeterminism(good) == []
+
+
+def test_nondeterminism_catches_wall_clock_in_async_engine_style_code():
+    """The async engine's event clock must come from the Eq. 6/7 latency
+    model on seeded draws — wall-clock reads (and sleeps) in an
+    async-engine-styled event loop are violations, and the engine's
+    module path is inside the lint's simulation scope."""
+    from repro.check.lints import _in_scope
+    bad = SourceFile.from_text(textwrap.dedent("""
+        import heapq
+        import time
+
+        def run(heap):
+            while heap:
+                t_arr, e = heapq.heappop(heap)
+                time.sleep(t_arr - time.time())
+                yield e
+    """), rel="src/repro/federated/async_engine.py")
+    vs = lint_nondeterminism(bad)
+    assert len(vs) == 2 and all(v.rule == "nondeterminism" for v in vs)
+    assert any("sleep" in v.message for v in vs)
+    assert any("time.time" in v.message for v in vs)
+    assert _in_scope(bad)
+    # launch/ is host tooling — the driver may time its own wall-clock
+    assert not _in_scope(SourceFile.from_text(
+        "x = 1", rel="src/repro/launch/serve.py"))
 
 
 def test_waiver_comment_suppresses_rule():

@@ -131,3 +131,47 @@ def test_cost_bisect_jnp_batched_axes():
     np.testing.assert_array_equal(stacked[0], single)
     feas = single <= 23
     assert np.all(stacked[1][feas] <= single[feas])   # better channel
+
+
+# ---------------------------------------------------------------------- #
+# AR(1)/Gauss-Markov block fading (cfg.channel_corr, DESIGN.md §13)
+# ---------------------------------------------------------------------- #
+def test_channel_corr_zero_is_legacy_draw_bit_for_bit():
+    """rho = 0 (the default) must consume the EXACT legacy RNG stream:
+    uniform positions, then one exponential per draw_channels() call."""
+    wm, cfg = _wm(seed=7)
+    twin = np.random.default_rng(7)
+    half = cfg.cell_side_m / 2.0
+    xy = twin.uniform(-half, half, size=(cfg.n_population, 2))
+    dist = np.maximum(np.linalg.norm(xy, axis=1), 1.0)
+    for _ in range(3):
+        ch = wm.draw_channels()
+        h2 = twin.exponential(1.0, size=dist.shape)
+        np.testing.assert_array_equal(
+            ch.gains, dist ** (-cfg.pathloss_exp) * h2)
+        np.testing.assert_array_equal(wm.last_gains, ch.gains)
+    assert wm._h is None                     # no fading state materialised
+
+
+def test_channel_corr_state_persists_and_positive():
+    wm, _ = _wm(seed=3, channel_corr=0.8)
+    g1 = wm.draw_channels().gains
+    h_after_first = wm._h.copy()
+    g2 = wm.draw_channels().gains
+    assert wm._h is not None and not np.array_equal(wm._h, h_after_first)
+    assert np.all(g1 > 0) and np.all(g2 > 0)
+    assert not np.array_equal(g1, g2)        # fading evolves, not frozen
+
+
+def test_channel_corr_stationary_stats():
+    """|h|^2 stays Exp(1) (mean 1) and its lag-1 correlation is ~rho^2."""
+    rho = 0.8
+    wm, cfg = _wm(seed=11, n_ues=200, channel_corr=rho)
+    d_alpha = wm.distances ** cfg.pathloss_exp
+    # divide out the pathloss to recover the (T, N) small-scale power
+    h2 = np.stack([wm.draw_channels().gains * d_alpha
+                   for _ in range(400)])
+    assert abs(h2.mean() - 1.0) < 0.05
+    x, y = h2[:-1].ravel(), h2[1:].ravel()
+    corr = np.corrcoef(x, y)[0, 1]
+    assert abs(corr - rho ** 2) < 0.05
