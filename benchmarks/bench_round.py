@@ -89,7 +89,6 @@ import os
 import platform
 import subprocess
 import sys
-import time
 
 import numpy as np
 
@@ -130,7 +129,10 @@ def write_bench_json(name, payload, canonical=True, results_dir=None):
     ``results/BENCH_history.jsonl`` — the commit+env-keyed trend log
     (the meta block carries commit, python/jax/numpy versions and a UTC
     timestamp), so re-running any bench on a new commit grows per-bench
-    perf history instead of overwriting it.
+    perf history instead of overwriting it. When the span tracer is on
+    (REPRO_TRACE=1, DESIGN.md §14) the history line additionally carries
+    the tracer's per-phase wall-time summary under ``"trace"`` — the
+    per-phase trend rides the same log as the headline numbers.
 
     ``results_dir`` overrides the repo results/ directory (tests). The
     caller's ``payload`` dict is never mutated (tests/test_bench_writer.py
@@ -148,24 +150,38 @@ def write_bench_json(name, payload, canonical=True, results_dir=None):
               "meta": _bench_meta(), **payload}
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    hist = record
+    try:
+        from repro.obs import trace
+        if trace.enabled():
+            phases = trace.phase_summary()
+            if phases:
+                hist = {**record, "trace": phases}
+    except ImportError:
+        pass
     with open(os.path.join(results, "BENCH_history.jsonl"), "a") as f:
-        f.write(json.dumps(record, separators=(",", ":")) + "\n")
+        f.write(json.dumps(hist, separators=(",", ":")) + "\n")
     print(f"# wrote {os.path.normpath(path)} (+history)", file=sys.stderr)
 
 _WORKER = r"""
-import json, sys, time
+import json, sys
 import numpy as np
 from repro.configs.base import FeelConfig
 from repro.core.poisoning import EASY_PAIR, LabelFlipAttack, pick_malicious
 from repro.data.partition import partition
 from repro.data.synthetic_mnist import generate
 from repro.federated.server import FeelServer
+from repro.obs import trace
 
 engine, k, n_train, n_test, rounds, seeds, n_buckets = (
     sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
     int(sys.argv[5]), int(sys.argv[6]), int(sys.argv[7]))
 cfg = FeelConfig(n_ues=k, n_malicious=max(k // 10, 1))
-times, wastes = [], []
+# the tracer IS the timer: per-round wall times are the "round" spans'
+# durations (keeps the trace path honest under the parity matrix), and
+# REPRO_TRACE_FILE (if set by the driver) flushes the full trace at exit
+trace.configure(enabled=True)
+wastes = []
 for seed in range(seeds):
     train, test = generate(n_train, n_test, seed=seed)
     rng = np.random.default_rng(seed)
@@ -175,11 +191,12 @@ for seed in range(seeds):
     server = FeelServer(cfg, clients, test, rng, policy="dqs",
                         engine=engine, n_buckets=n_buckets)
     for t in range(rounds):
-        t0 = time.perf_counter()
         server.run_round(t)
-        times.append(time.perf_counter() - t0)
     wastes.extend(server.pad_waste)
-print(json.dumps({"times": times, "waste": wastes}))
+times = [sp.dur for sp in trace.tracer().spans if sp.name == "round"]
+assert len(times) == rounds * seeds, (len(times), rounds, seeds)
+print(json.dumps({"times": times, "waste": wastes,
+                  "trace": trace.phase_summary()}))
 """
 
 _SWEEP_WORKER = r"""
@@ -885,13 +902,14 @@ else:
 """
 
 _LLM_WORKER = r"""
-import json, sys, time
+import json, sys
 import numpy as np
 from repro.configs.base import FeelConfig
 from repro.core.attacks import as_scenario
 from repro.core.poisoning import pick_malicious
 from repro.federated.server import FeelServer
 from repro.federated.task import as_task
+from repro.obs import trace
 
 engine, k, n_train, n_test, rounds = (
     sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
@@ -905,14 +923,16 @@ malicious = pick_malicious(k, cfg.n_malicious, rng)
 clients = task.partition_clients(train, k, rng, malicious, scn.data)
 server = FeelServer(cfg, clients, test, rng, policy="dqs", engine=engine,
                     scenario=scn)
-times, losses = [], []
+trace.configure(enabled=True)   # per-round times = the "round" spans
+losses = []
 for t in range(rounds):
-    t0 = time.perf_counter()
     log = server.run_round(t)
-    times.append(time.perf_counter() - t0)
     losses.append(log.global_loss)
 assert all(np.isfinite(l) for l in losses), losses
-print(json.dumps({"times": times, "loss": losses}))
+times = [sp.dur for sp in trace.tracer().spans if sp.name == "round"]
+assert len(times) == rounds, (len(times), rounds)
+print(json.dumps({"times": times, "loss": losses,
+                  "trace": trace.phase_summary()}))
 """
 
 LLM_KS = (8, 16)          # the tracked BENCH_llm.json K grid
@@ -1104,6 +1124,25 @@ def smoke():
                               write_json=False)
     assert len(async_cells) == 3 and all(
         np.isfinite(c["final_acc"]) for c in async_cells), async_cells
+    # observability plane (DESIGN.md §14): a traced engines cell — the
+    # worker hands its trace back through REPRO_TRACE_FILE and the report
+    # must see schedule/train phase timings plus roofline context for both
+    import tempfile
+    from repro.obs import report as obs_report
+    with tempfile.TemporaryDirectory() as td:
+        tpath = os.path.join(td, "trace.jsonl")
+        _run_worker(_WORKER, ["vectorized", 8, 1200, 200, 2, 1, 3],
+                    extra_env={"REPRO_TRACE": "1",
+                               "REPRO_TRACE_FILE": tpath})
+        rep = obs_report.summarize(tpath)
+    for ph in ("round", "schedule", "train", "eval"):
+        assert ph in rep["phases"], (ph, sorted(rep["phases"]))
+    for ph in ("schedule", "train"):
+        assert ph in rep["roofline"], (ph, sorted(rep["roofline"]))
+    n_spans = int(sum(p["count"] for p in rep["phases"].values()))
+    print(f"trace,{n_spans},{len(rep['phases'])},"
+          f"{rep['phases']['round']['total_s']:.3f},"
+          f"{len(rep['compile_offenders'])}", flush=True)
     print(f"# smoke OK: waste {w_un:.2f}x -> {w_b:.2f}x, "
           f"sweep speedup {speedup:.2f}x, "
           f"control speedup {ctl_rows[0]['speedup']:.2f}x, "

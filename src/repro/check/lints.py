@@ -26,8 +26,13 @@ nondeterminism
     RNG stream of record — and never from wall clocks: module-singleton
     ``np.random.<draw>()`` calls, unseeded ``default_rng()`` /
     ``RandomState()``, ``time.time()`` and friends, and
-    ``datetime.now()`` are violations. (launch/ and sharding/ are
-    wall-clock perf tooling, out of scope.)
+    ``datetime.now()`` are violations. Outside the simulation dirs the
+    wall-clock half still applies repo-wide: direct ``time.time`` /
+    ``time.perf_counter`` / ``time.monotonic`` (and the ``_ns`` /
+    ``sleep`` variants) anywhere under ``src/repro`` are violations
+    EXCEPT in ``obs/clock.py`` — the repo's only sanctioned wall-clock
+    site (DESIGN.md §14); host tooling that wants a timer routes
+    through ``repro.obs.clock.wall_clock``.
 
 dtype-f64
     Device-side float64 belongs to the control plane only and always
@@ -279,6 +284,41 @@ def lint_nondeterminism(src: SourceFile) -> List[Violation]:
     return out
 
 
+def lint_wall_clock(src: SourceFile) -> List[Violation]:
+    """The wall-clock half of the nondeterminism rule, applied repo-wide.
+
+    Direct ``time.<clock>()`` calls (``time``, ``perf_counter``,
+    ``monotonic``, the ``_ns`` variants, ``sleep``) anywhere under
+    ``src/repro`` are violations outside the one sanctioned site,
+    ``obs/clock.py`` — host tooling that wants a timer routes through
+    ``repro.obs.clock.wall_clock`` so the telemetry plane (DESIGN.md
+    §14) owns every wall-clock read. Same rule id as the simulation
+    lint, so existing ``# repro: allow nondeterminism`` waivers apply.
+    """
+    out: List[Violation] = []
+    aliases = module_aliases(src.tree)
+    time_mods = _aliases_of(aliases, "time") & {
+        k for k, v in aliases.items() if "." not in v}
+    clock_funcs = {k for k, v in aliases.items()
+                   if v in {f"time.{f}" for f in _CLOCK_FUNCS}}
+    if not time_mods and not clock_funcs:
+        return out
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func) or ""
+        parts = callee.split(".")
+        if (len(parts) == 2 and parts[0] in time_mods
+                and parts[1] in _CLOCK_FUNCS) \
+                or (len(parts) == 1 and parts[0] in clock_funcs):
+            _violate(out, src, "nondeterminism", node.lineno,
+                     f"wall clock `{callee}()` outside repro.obs.clock — "
+                     "route through `repro.obs.clock.wall_clock`, the "
+                     "repo's only sanctioned wall-clock site "
+                     "(DESIGN.md §14)")
+    return out
+
+
 # --------------------------------------------------------------------- #
 # dtype-f64 / masked-mean-pin
 # --------------------------------------------------------------------- #
@@ -358,9 +398,18 @@ def check_tracer_leak(ctx: CheckContext) -> List[Violation]:
             for v in lint_tracer_leak(s)]
 
 
+# the ONE file allowed to read the wall clock (DESIGN.md §14)
+_CLOCK_SITE = "src/repro/obs/clock.py"
+
+
 def check_nondeterminism(ctx: CheckContext) -> List[Violation]:
-    return [v for s in ctx.sources if _in_scope(s)
-            for v in lint_nondeterminism(s)]
+    out: List[Violation] = []
+    for s in ctx.sources:
+        if _in_scope(s):
+            out.extend(lint_nondeterminism(s))
+        elif s.rel.startswith("src/repro/") and s.rel != _CLOCK_SITE:
+            out.extend(lint_wall_clock(s))
+    return out
 
 
 def check_dtype(ctx: CheckContext) -> List[Violation]:

@@ -69,6 +69,7 @@ from repro.core.reputation import reputation_update_eq1
 from repro.core.scheduler import (POLICY_IDS, greedy_pack_jnp, pack_scan,
                                   priority_key)
 from repro.core.wireless import cost_bisect
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -323,18 +324,23 @@ def schedule_runs(state: ControlState, gains: np.ndarray,
     rand_rank = np.asarray(rand_rank)
     w_rep = np.asarray(w_rep, float)
     w_div = np.asarray(w_div, float)
-    if (kernel or default_kernel()) == "hybrid":
-        return _schedule_hybrid(state, gains, rand_rank, w_rep, w_div)
-    cfg = state.cfg
-    with enable_x64():
-        x, alpha, costs, values, forced = _schedule_kernel(
-            state.policy_id, state.reputations, state.ages, state.divs,
-            state.sizes, state.r_min, gains, rand_rank, w_rep, w_div,
-            np.asarray(cfg.gamma, float), cfg.bandwidth_hz, cfg.p_watt,
-            cfg.n0_watt_hz, k=cfg.n_ues, n_sel=cfg.min_selected)
-    return (np.asarray(x), np.asarray(alpha),
-            np.asarray(costs).astype(int), np.asarray(values),
-            np.asarray(forced))
+    kern = kernel or default_kernel()
+    with trace.span("schedule.pack") as sp:
+        if trace.enabled():
+            sp.set(kernel=kern, runs=int(state.n_runs),
+                   width=int(state.reputations.shape[1]))
+        if kern == "hybrid":
+            return _schedule_hybrid(state, gains, rand_rank, w_rep, w_div)
+        cfg = state.cfg
+        with enable_x64():
+            x, alpha, costs, values, forced = _schedule_kernel(
+                state.policy_id, state.reputations, state.ages, state.divs,
+                state.sizes, state.r_min, gains, rand_rank, w_rep, w_div,
+                np.asarray(cfg.gamma, float), cfg.bandwidth_hz, cfg.p_watt,
+                cfg.n0_watt_hz, k=cfg.n_ues, n_sel=cfg.min_selected)
+        return (np.asarray(x), np.asarray(alpha),
+                np.asarray(costs).astype(int), np.asarray(values),
+                np.asarray(forced))
 
 
 @jax.jit
@@ -367,35 +373,38 @@ def finalize_runs(state: ControlState, sels: List[np.ndarray],
     """
     cfg = state.cfg
     R, K = state.reputations.shape
-    mask = np.zeros((R, K))
-    al = np.zeros((R, K))
-    at = np.zeros((R, K))
-    pen = np.zeros((R, K))
-    for i, (sel, a, t) in enumerate(zip(sels, acc_locals, acc_tests)):
-        mask[i, sel] = 1.0
-        al[i, sel] = a
-        at[i, sel] = t
-        if penalties is not None and penalties[i] is not None:
-            pen[i, sel] = penalties[i]
-    if (kernel or default_kernel()) == "hybrid":
-        # cohort average computed exactly like the host tracker (np.mean
-        # over the compressed cohort, not a full-K masked sum)
-        avg = np.array([[np.mean(a) if len(a) else 0.0]
-                        for a in acc_locals])
-        delta = cfg.eta * (cfg.beta1 * (al - avg)
-                           + cfg.beta2 * (al - at)) + pen
-        new = np.clip(state.reputations - delta, 0.0, 1.0)
-        state.reputations = np.where(mask > 0, new, state.reputations)
-        state.ages = np.where(mask > 0, 1.0, state.ages + 1.0)
-        return
-    with enable_x64():
-        rep, ages = _finalize_kernel(
-            state.reputations, state.ages, mask, al, at, pen,
-            cfg.eta, cfg.beta1, cfg.beta2)
-    # np.array (not asarray): device outputs give read-only numpy views,
-    # and these buffers are written in-place by the next round's pull()
-    state.reputations = np.array(rep)
-    state.ages = np.array(ages)
+    with trace.span("schedule.finalize") as sp:
+        if trace.enabled():
+            sp.set(runs=int(R), width=int(K))
+        mask = np.zeros((R, K))
+        al = np.zeros((R, K))
+        at = np.zeros((R, K))
+        pen = np.zeros((R, K))
+        for i, (sel, a, t) in enumerate(zip(sels, acc_locals, acc_tests)):
+            mask[i, sel] = 1.0
+            al[i, sel] = a
+            at[i, sel] = t
+            if penalties is not None and penalties[i] is not None:
+                pen[i, sel] = penalties[i]
+        if (kernel or default_kernel()) == "hybrid":
+            # cohort average computed exactly like the host tracker (np.mean
+            # over the compressed cohort, not a full-K masked sum)
+            avg = np.array([[np.mean(a) if len(a) else 0.0]
+                            for a in acc_locals])
+            delta = cfg.eta * (cfg.beta1 * (al - avg)
+                               + cfg.beta2 * (al - at)) + pen
+            new = np.clip(state.reputations - delta, 0.0, 1.0)
+            state.reputations = np.where(mask > 0, new, state.reputations)
+            state.ages = np.where(mask > 0, 1.0, state.ages + 1.0)
+            return
+        with enable_x64():
+            rep, ages = _finalize_kernel(
+                state.reputations, state.ages, mask, al, at, pen,
+                cfg.eta, cfg.beta1, cfg.beta2)
+        # np.array (not asarray): device outputs give read-only numpy views,
+        # and these buffers are written in-place by the next round's pull()
+        state.reputations = np.array(rep)
+        state.ages = np.array(ages)
 
 
 def staleness_discount(ages: np.ndarray, decay: float) -> np.ndarray:

@@ -81,6 +81,7 @@ from repro.core.quality import data_quality_value
 from repro.core.scheduler import pack_scan, priority_key
 from repro.core.wireless import cost_bisect
 from repro.launch.mesh import make_host_mesh
+from repro.obs import trace
 from repro.sharding.specs import data_axes, named
 
 # Default M = PREFILTER_HEADROOM * K candidates survive the top-M cut.
@@ -282,6 +283,14 @@ def _prefilter_kernel(policy_id, rep, ages, divs, sizes, r_min, gains,
 # ---------------------------------------------------------------------- #
 # Entry point
 # ---------------------------------------------------------------------- #
+def _state_nbytes(state: ctl.ControlState) -> int:
+    """Resident bytes of the (R, N) control-plane state — the same
+    accounting as ``PopulationState.nbytes`` (telemetry gauge only)."""
+    return sum(np.asarray(a).nbytes
+               for a in (state.sizes, state.divs, state.r_min,
+                         state.reputations, state.ages))
+
+
 def prefilter_schedule_runs(state: ctl.ControlState, gains, rand_rank,
                             w_rep, w_div, m: Optional[int] = None,
                             kernel: Optional[str] = None, mesh=None):
@@ -308,50 +317,61 @@ def prefilter_schedule_runs(state: ctl.ControlState, gains, rand_rank,
     N = state.reputations.shape[1]
     m_eff = int(min(m if m is not None else default_m(cfg), N))
     assert m_eff >= cfg.min_selected, (m_eff, cfg.min_selected)
-    if m_eff >= N:      # no cut: the exact path IS the prefilter path
-        out = ctl.schedule_runs(state, gains, rand_rank, w_rep, w_div,
-                                kernel=kernel)
-        return (*out, {"m": N, "n_escalated": 0})
+    with trace.span("schedule.prefilter") as sp:
+        if m_eff >= N:      # no cut: the exact path IS the prefilter path
+            out = ctl.schedule_runs(state, gains, rand_rank, w_rep, w_div,
+                                    kernel=kernel)
+            if trace.enabled():
+                sp.set(m=N, runs=int(R), width=int(N), n_escalated=0)
+                trace.gauge_set("population.nbytes",
+                                float(_state_nbytes(state)))
+            return (*out, {"m": N, "n_escalated": 0})
 
-    kern = kernel or ctl.default_kernel()
-    if kern == "jax":
-        ops = [state.reputations, state.ages, state.divs, state.sizes,
-               state.r_min, gains, rand_rank]
-        with enable_x64():
-            if mesh is not None:
-                # placed INSIDE enable_x64: outside it device_put would
-                # canonicalize the float64 control state down to float32
-                # and silently break oracle bit-parity
-                sh = named(mesh, PartitionSpec(None, data_axes(mesh)))
-                ops = [jax.device_put(np.asarray(a), sh) for a in ops]
-            x, alpha, costs, values, forced, cert = _prefilter_kernel(
-                state.policy_id, *ops, w_rep, w_div,
-                np.asarray(cfg.gamma, float), cfg.bandwidth_hz,
-                cfg.p_watt, cfg.n0_watt_hz,
-                k=K, n_sel=cfg.min_selected, m=m_eff)
-        x, alpha = np.array(x), np.array(alpha)
-        costs, values = np.array(costs).astype(int), np.array(values)
-        forced, cert = np.array(forced), np.asarray(cert)
-    else:
-        x, alpha, costs, values, forced, cert = _prefilter_hybrid(
-            state, gains, rand_rank, w_rep, w_div, m_eff)
+        kern = kernel or ctl.default_kernel()
+        if kern == "jax":
+            ops = [state.reputations, state.ages, state.divs, state.sizes,
+                   state.r_min, gains, rand_rank]
+            with enable_x64():
+                if mesh is not None:
+                    # placed INSIDE enable_x64: outside it device_put would
+                    # canonicalize the float64 control state down to float32
+                    # and silently break oracle bit-parity
+                    sh = named(mesh, PartitionSpec(None, data_axes(mesh)))
+                    ops = [jax.device_put(np.asarray(a), sh) for a in ops]
+                x, alpha, costs, values, forced, cert = _prefilter_kernel(
+                    state.policy_id, *ops, w_rep, w_div,
+                    np.asarray(cfg.gamma, float), cfg.bandwidth_hz,
+                    cfg.p_watt, cfg.n0_watt_hz,
+                    k=K, n_sel=cfg.min_selected, m=m_eff)
+            x, alpha = np.array(x), np.array(alpha)
+            costs, values = np.array(costs).astype(int), np.array(values)
+            forced, cert = np.array(forced), np.asarray(cert)
+        else:
+            x, alpha, costs, values, forced, cert = _prefilter_hybrid(
+                state, gains, rand_rank, w_rep, w_div, m_eff)
 
-    # escalate certificate failures to the exact path (still one batched
-    # call over just the failing rows)
-    bad = np.flatnonzero(~cert)
-    if bad.size:
-        sub = ctl.ControlState(
-            policy_id=state.policy_id[bad], sizes=state.sizes[bad],
-            divs=state.divs[bad], r_min=state.r_min[bad],
-            reputations=state.reputations[bad], ages=state.ages[bad],
-            cfg=cfg)
-        xs, als, cs, vs, fs = ctl.schedule_runs(
-            sub, gains[bad], rand_rank[bad], w_rep[bad], w_div[bad],
-            kernel=kern)
-        x[bad], alpha[bad], forced[bad] = xs, als, fs
-        costs[bad], values[bad] = cs, vs
-    return (x, alpha, costs, values, forced,
-            {"m": m_eff, "n_escalated": int(bad.size)})
+        # escalate certificate failures to the exact path (still one batched
+        # call over just the failing rows)
+        bad = np.flatnonzero(~cert)
+        if bad.size:
+            sub = ctl.ControlState(
+                policy_id=state.policy_id[bad], sizes=state.sizes[bad],
+                divs=state.divs[bad], r_min=state.r_min[bad],
+                reputations=state.reputations[bad], ages=state.ages[bad],
+                cfg=cfg)
+            xs, als, cs, vs, fs = ctl.schedule_runs(
+                sub, gains[bad], rand_rank[bad], w_rep[bad], w_div[bad],
+                kernel=kern)
+            x[bad], alpha[bad], forced[bad] = xs, als, fs
+            costs[bad], values[bad] = cs, vs
+        if trace.enabled():
+            sp.set(m=m_eff, runs=int(R), width=int(N),
+                   n_escalated=int(bad.size))
+            trace.counter_inc("population.escalations", int(bad.size))
+            trace.gauge_set("population.nbytes",
+                            float(_state_nbytes(state)))
+        return (x, alpha, costs, values, forced,
+                {"m": m_eff, "n_escalated": int(bad.size)})
 
 
 def _prefilter_hybrid(state: ctl.ControlState, gains, rand_rank,

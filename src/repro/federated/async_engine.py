@@ -70,6 +70,7 @@ import numpy as np
 from repro.core import control as ctl
 from repro.federated import cohort
 from repro.federated.server import FeelServer, RoundLog
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -134,40 +135,47 @@ class AsyncFeelEngine:
         """Schedule + train the next wave over the non-busy UEs and push
         its arrival events."""
         srv = self.server
-        srv.unavailable = self._busy.copy() if self._busy.any() else None
-        try:
-            values, sched, sel, forced = srv._schedule_round(self.wave)
-        finally:
-            srv.unavailable = None
-        # channel-blind selections (top_value, the forced rewrite) ignore
-        # the zeroed gains — drop busy UEs here
-        sel = sel[~self._busy[sel]]
-        self._plan = (values, sched, forced)
-        self._dispatch_t = self.t_sim
-        wave = self.wave
-        self.wave += 1
-        if sel.size == 0:
-            return
-        uploads, weights, acc_local, acc_test, acc_val = \
-            srv._train_cohort(sel, wave)
-        gains = srv.wireless.last_gains
-        lat = (self._t_train[sel]
-               + srv.wireless.upload_time(gains, sched.alpha)[sel]) \
-            * srv.cfg.async_latency_scale
-        assert np.all(np.isfinite(lat)), \
-            "non-finite upload latency for a scheduled UE"
-        self._store[wave] = {"uploads": uploads, "weights": weights,
-                             "left": sel.size}
-        self._busy[sel] = True
-        for i, ue in enumerate(sel):
-            e = _Upload(ue=int(ue), wave=wave, version=self.version, row=i,
-                        latency=float(lat[i]),
-                        acc_local=float(acc_local[i]),
-                        acc_test=float(acc_test[i]),
-                        acc_val=(None if acc_val is None
-                                 else np.asarray(acc_val[:, i])))
-            heapq.heappush(self._heap, (self.t_sim + e.latency, self._seq, e))
-            self._seq += 1
+        with trace.span("async.dispatch") as sp:
+            srv.unavailable = self._busy.copy() if self._busy.any() else None
+            try:
+                values, sched, sel, forced = srv._schedule_round(self.wave)
+            finally:
+                srv.unavailable = None
+            # channel-blind selections (top_value, the forced rewrite)
+            # ignore the zeroed gains — drop busy UEs here
+            sel = sel[~self._busy[sel]]
+            self._plan = (values, sched, forced)
+            self._dispatch_t = self.t_sim
+            wave = self.wave
+            self.wave += 1
+            if trace.enabled():
+                sp.set(wave=wave, n_selected=int(sel.size),
+                       n_busy=int(self._busy.sum()))
+            if sel.size == 0:
+                return
+            uploads, weights, acc_local, acc_test, acc_val = \
+                srv._train_cohort(sel, wave)
+            gains = srv.wireless.last_gains
+            lat = (self._t_train[sel]
+                   + srv.wireless.upload_time(gains, sched.alpha)[sel]) \
+                * srv.cfg.async_latency_scale
+            assert np.all(np.isfinite(lat)), \
+                "non-finite upload latency for a scheduled UE"
+            self._store[wave] = {"uploads": uploads, "weights": weights,
+                                 "left": sel.size}
+            self._busy[sel] = True
+            for i, ue in enumerate(sel):
+                e = _Upload(ue=int(ue), wave=wave, version=self.version,
+                            row=i, latency=float(lat[i]),
+                            acc_local=float(acc_local[i]),
+                            acc_test=float(acc_test[i]),
+                            acc_val=(None if acc_val is None
+                                     else np.asarray(acc_val[:, i])))
+                heapq.heappush(self._heap,
+                               (self.t_sim + e.latency, self._seq, e))
+                self._seq += 1
+            if trace.enabled():
+                trace.gauge_set("async.heap_depth", len(self._heap))
 
     # ------------------------------------------------------------------ #
     def _gather(self, entries: List[_Upload]):
@@ -211,32 +219,39 @@ class AsyncFeelEngine:
         FedAvg (or the defense plane's robust aggregator), Eq. 1
         finalization for the aggregated UEs, RoundLog + AggregationLog."""
         srv = self.server
-        entries, self._buffer = self._buffer, []
-        assert entries, "aggregate called with an empty buffer"
-        sel = np.array([e.ue for e in entries])
-        uploads, weights, ages, disc = self._gather(entries)
-        srv._aggregate_uploads(sel, uploads, weights)
-        for e in entries:
-            st = self._store[e.wave]
-            st["left"] -= 1
-            if st["left"] == 0:
-                del self._store[e.wave]
-        self._busy[sel] = False
-        acc_local = np.array([e.acc_local for e in entries])
-        acc_test = np.array([e.acc_test for e in entries])
-        acc_val = (None if entries[0].acc_val is None
-                   else np.stack([e.acc_val for e in entries], axis=1))
-        g_acc, g_loss, src_acc, atk_succ = srv._global_metrics()
-        values, sched, forced = self._plan
-        log = srv._finalize_round(self.version, values, sched, sel, forced,
-                                  acc_local, acc_test, g_acc, src_acc,
-                                  atk_succ, acc_val, g_loss)
-        self.agg_logs.append(AggregationLog(
-            version=self.version, sim_time=self.t_sim, trigger=trigger,
-            n_uploads=len(entries), ages=ages, discounts=disc,
-            waves=np.array([e.wave for e in entries])))
-        self.version += 1
-        return log
+        with trace.span("async.aggregate") as sp:
+            entries, self._buffer = self._buffer, []
+            assert entries, "aggregate called with an empty buffer"
+            sel = np.array([e.ue for e in entries])
+            uploads, weights, ages, disc = self._gather(entries)
+            if trace.enabled():
+                sp.set(version=self.version, trigger=trigger,
+                       n_uploads=len(entries), mean_age=float(ages.mean()))
+                for a in ages:
+                    trace.observe("async.upload_age", float(a))
+                trace.gauge_set("async.heap_depth", len(self._heap))
+            srv._aggregate_uploads(sel, uploads, weights)
+            for e in entries:
+                st = self._store[e.wave]
+                st["left"] -= 1
+                if st["left"] == 0:
+                    del self._store[e.wave]
+            self._busy[sel] = False
+            acc_local = np.array([e.acc_local for e in entries])
+            acc_test = np.array([e.acc_test for e in entries])
+            acc_val = (None if entries[0].acc_val is None
+                       else np.stack([e.acc_val for e in entries], axis=1))
+            g_acc, g_loss, src_acc, atk_succ = srv._global_metrics()
+            values, sched, forced = self._plan
+            log = srv._finalize_round(self.version, values, sched, sel,
+                                      forced, acc_local, acc_test, g_acc,
+                                      src_acc, atk_succ, acc_val, g_loss)
+            self.agg_logs.append(AggregationLog(
+                version=self.version, sim_time=self.t_sim, trigger=trigger,
+                n_uploads=len(entries), ages=ages, discounts=disc,
+                waves=np.array([e.wave for e in entries])))
+            self.version += 1
+            return log
 
     # ------------------------------------------------------------------ #
     def _trigger(self) -> bool:
@@ -251,6 +266,19 @@ class AsyncFeelEngine:
         return the server's RoundLogs (one per aggregation)."""
         cfg = self.server.cfg
         n_agg = rounds or cfg.rounds
+        # dual-clock discipline (DESIGN.md §14): while the event loop is
+        # driving, every span records the simulated event clock alongside
+        # the wall clock. Reading ``t_sim`` is telemetry-only — the sim
+        # clock still advances exclusively via the Eq. 6/7 latency model.
+        trace.set_sim_clock(lambda: self.t_sim)
+        try:
+            self._run(n_agg)
+        finally:
+            trace.set_sim_clock(None)
+        return self.server.logs
+
+    def _run(self, n_agg: int) -> None:
+        cfg = self.server.cfg
         self._dispatch()
         while self.version < n_agg:
             deadline = (math.inf if cfg.async_deadline is None
@@ -280,4 +308,3 @@ class AsyncFeelEngine:
                                      "heap and empty buffer")
             self._aggregate(trig)
             self._dispatch()
-        return self.server.logs

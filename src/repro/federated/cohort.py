@@ -189,3 +189,25 @@ def cohort_eval_rows(task, stacked_params, eval_inputs, y_rows, masks):
 def unstack(stacked_params, i: int):
     """Extract client ``i``'s parameter pytree from the stacked cohort."""
     return jax.tree.map(lambda l: l[i], stacked_params)
+
+
+# ---------------------------------------------------------------------- #
+# telemetry probe surface (DESIGN.md §14)
+# ---------------------------------------------------------------------- #
+# The four jitted entry points of the data plane. The tracer's first-call
+# probe (obs.trace.jit_cache_size before/after a call) splits compile
+# from execute on the train spans, and the sweep/serve drivers snapshot
+# the whole map as compile-cache gauges at end of run.
+JITTED_ENTRY_POINTS = {
+    "cohort_train": cohort_train,
+    "cohort_train_multi": cohort_train_multi,
+    "cohort_eval": cohort_eval,
+    "cohort_eval_rows": cohort_eval_rows,
+}
+
+
+def cache_sizes() -> dict:
+    """Compile-cache entry count per jitted entry point (-1 if the
+    probe API is unavailable on this jax version)."""
+    from repro.obs.trace import jit_cache_size
+    return {k: jit_cache_size(f) for k, f in JITTED_ENTRY_POINTS.items()}

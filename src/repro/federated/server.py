@@ -64,6 +64,7 @@ from repro.data.partition import (ClientData, pad_clients,
 from repro.federated import cohort
 from repro.federated.aggregation import fedavg, fedavg_stacked
 from repro.federated.task import FeelTask, as_task
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -355,6 +356,7 @@ class FeelServer:
         self.unavailable: Optional[np.ndarray] = None
         self.pad_waste: List[float] = []   # per-round padded/real sample ratio
         self.logs: List[RoundLog] = []
+        self._n_params: Optional[int] = None   # telemetry-only param count
 
     # ------------------------------------------------------------------ #
     def _omega(self, round_t: int) -> Tuple[float, float]:
@@ -547,13 +549,16 @@ class FeelServer:
         ``.at[i].set`` loop as the parity oracle (tests/test_attacks.py
         pins them bit-for-bit equal)."""
         scn = self.scenario
-        ref = self._attack_ref_params()
-        mal = self._active_malicious(sel, t)
-        if scn.model is not None and mal.any():
-            stacked = scn.model.apply_stacked(stacked, self.params, mal,
-                                              ref)
-        if scn.report is not None:
-            acc_local = scn.report.apply(acc_local, mal)
+        with trace.span("attack.apply") as sp:
+            ref = self._attack_ref_params()
+            mal = self._active_malicious(sel, t)
+            if scn.model is not None and mal.any():
+                stacked = scn.model.apply_stacked(stacked, self.params,
+                                                  mal, ref)
+            if scn.report is not None:
+                acc_local = scn.report.apply(acc_local, mal)
+            if trace.enabled():
+                sp.set(scenario=scn.name, n_active=int(mal.sum()))
         return stacked, acc_local
 
     def _apply_attacks_loop(self, sel, stacked, acc_local, t):
@@ -601,13 +606,16 @@ class FeelServer:
         if weights is None:
             weights = self._cohort_weights(sel, stacked_p)
         agg = self.defense.aggregator
-        if agg is None:
-            self.params = fedavg_stacked(stacked_p, weights)
-            self._def_stats = dfs.DefenseStats()
-        else:
-            self.params, self._def_stats = dfs.aggregate_stacked(
-                agg, stacked_p, weights, self.params, sel.size,
-                self.cfg.n_malicious)
+        with trace.span("defense.aggregate") as sp:
+            if trace.enabled():
+                sp.set(defense=self.defense.name, n=int(sel.size))
+            if agg is None:
+                self.params = fedavg_stacked(stacked_p, weights)
+                self._def_stats = dfs.DefenseStats()
+            else:
+                self.params, self._def_stats = dfs.aggregate_stacked(
+                    agg, stacked_p, weights, self.params, sel.size,
+                    self.cfg.n_malicious)
 
     def _run_cohort_vectorized(self, sel: np.ndarray, t: int):
         cfg = self.cfg
@@ -616,9 +624,19 @@ class FeelServer:
         parts, pad_slots = [], 0
         for bkt, pos, rows in self._cohort_parts(sel, t):
             data, ms = self._gather_bucket(bkt, rows)
-            stacked_b, acc_b = cohort.cohort_train(
-                self.task, self.params, data, ms, self.lr,
-                cfg.local_epochs, self.batch_size)
+            with trace.span("train.bucket") as bsp:
+                probe0 = (trace.jit_cache_size(cohort.cohort_train)
+                          if trace.enabled() else 0)
+                stacked_b, acc_b = cohort.cohort_train(
+                    self.task, self.params, data, ms, self.lr,
+                    cfg.local_epochs, self.batch_size)
+                if trace.enabled():
+                    bsp.set(level=int(bkt["level"]), rows=int(rows.size),
+                            real=int(pos.size),
+                            compiled=trace.jit_cache_size(
+                                cohort.cohort_train) > probe0)
+                    trace.observe("train.bucket_occupancy",
+                                  pos.size / rows.size)
             parts.append((pos,
                           jax.tree.map(lambda l, m=pos.size: l[:m],
                                        stacked_b),
@@ -627,6 +645,8 @@ class FeelServer:
         stacked, acc_local = self._merge_cohort(parts)
         self.pad_waste.append(
             float(pad_slots) / max(float(cd.sizes[sel].sum()), 1.0))
+        if trace.enabled():
+            trace.observe("train.pad_waste", self.pad_waste[-1])
 
         stacked, acc_local = self._apply_attacks(sel, stacked, acc_local, t)
 
@@ -635,9 +655,16 @@ class FeelServer:
         # contribute exactly 0 with weight 0)
         n_pad = cohort.pad_count(n, self._N_BUCKET)
         stacked_p = cohort.pad_stacked(stacked, n_pad)
-        acc_test = np.asarray(
-            cohort.cohort_eval(self.task, stacked_p, self._ex, self._ey,
-                               self._eval_masks(sel, n_pad)), float)[:n]
+        with trace.span("eval") as esp:
+            probe0 = (trace.jit_cache_size(cohort.cohort_eval)
+                      if trace.enabled() else 0)
+            acc_test = np.asarray(
+                cohort.cohort_eval(self.task, stacked_p, self._ex, self._ey,
+                                   self._eval_masks(sel, n_pad)), float)[:n]
+            if trace.enabled():
+                esp.set(rows=int(n_pad),
+                        compiled=trace.jit_cache_size(
+                            cohort.cohort_eval) > probe0)
         acc_val = self._eval_validation(stacked_p, sel)
         return (stacked_p, self._cohort_weights(sel, stacked_p),
                 acc_local, acc_test, acc_val)
@@ -656,15 +683,18 @@ class FeelServer:
         ``cohort_eval`` machinery; (2, n): uploads row, global row)."""
         if self.defense.detector is None:
             return None
-        n = sel.size
-        n_pad = jax.tree.leaves(stacked_p)[0].shape[0]
-        vm = self._val_eval_masks(sel, n_pad)
-        both = cohort.merge_stacks(
-            [stacked_p, cohort.broadcast_params(self.params, n_pad)])
-        acc = np.asarray(
-            cohort.cohort_eval(self.task, both, self._ex, self._ey,
-                               jnp.concatenate([vm, vm])), float)
-        return np.stack([acc[:n], acc[n_pad:n_pad + n]])
+        with trace.span("eval.validation") as sp:
+            n = sel.size
+            n_pad = jax.tree.leaves(stacked_p)[0].shape[0]
+            vm = self._val_eval_masks(sel, n_pad)
+            both = cohort.merge_stacks(
+                [stacked_p, cohort.broadcast_params(self.params, n_pad)])
+            acc = np.asarray(
+                cohort.cohort_eval(self.task, both, self._ex, self._ey,
+                                   jnp.concatenate([vm, vm])), float)
+            if trace.enabled():
+                sp.set(rows=int(2 * n_pad))
+            return np.stack([acc[:n], acc[n_pad:n_pad + n]])
 
     # ------------------------------------------------------------------ #
     # Round phases. ``run_round`` composes them; the batched sweep runner
@@ -680,8 +710,19 @@ class FeelServer:
         had no feasible point, so the round's *objective* is 0.0 (the
         forced UE's V_k is not credited to the scheduler).
         """
-        if self.control == "batched":
-            return self._schedule_round_batched(t)
+        with trace.span("schedule") as sp:
+            if self.control == "batched":
+                out = self._schedule_round_batched(t)
+            else:
+                out = self._schedule_round_host(t)
+            if trace.enabled():
+                values, sched, sel, forced = out
+                sp.set(t=t, n_selected=int(sel.size), forced=bool(forced),
+                       **self._schedule_estimates())
+            return out
+
+    def _schedule_round_host(self, t: int):
+        """Sequential numpy oracle path of ``_schedule_round``."""
         values = self._values(t)
         sched = self._schedule(values)
         sel = sched.selected
@@ -745,9 +786,13 @@ class FeelServer:
         """(uploads, weights, acc_local, acc_test, acc_val) of the round's
         cohort — no aggregation (see the engines' section comment);
         ``acc_val`` is None unless the defense has a validation detector."""
-        if self.engine == "vectorized":
-            return self._run_cohort_vectorized(sel, t)
-        return self._run_cohort_loop(sel, t)
+        with trace.span("train") as sp:
+            if trace.enabled():
+                sp.set(t=t, engine=self.engine, n=int(sel.size),
+                       **self._train_estimates(sel))
+            if self.engine == "vectorized":
+                return self._run_cohort_vectorized(sel, t)
+            return self._run_cohort_loop(sel, t)
 
     def _aggregate_uploads(self, sel: np.ndarray, uploads,
                            weights: np.ndarray) -> None:
@@ -760,13 +805,16 @@ class FeelServer:
             self._aggregate_cohort(sel, uploads, weights)
             return
         agg = self.defense.aggregator
-        if agg is None:
-            self.params = fedavg(uploads, list(weights))
-            self._def_stats = dfs.DefenseStats()
-        else:
-            self.params, self._def_stats = dfs.aggregate_host(
-                agg, uploads, np.asarray(weights, float), self.params,
-                self.cfg.n_malicious)
+        with trace.span("defense.aggregate") as sp:
+            if trace.enabled():
+                sp.set(defense=self.defense.name, n=int(sel.size))
+            if agg is None:
+                self.params = fedavg(uploads, list(weights))
+                self._def_stats = dfs.DefenseStats()
+            else:
+                self.params, self._def_stats = dfs.aggregate_host(
+                    agg, uploads, np.asarray(weights, float), self.params,
+                    self.cfg.n_malicious)
 
     def _detect(self, sel: np.ndarray, acc_val) -> Optional[np.ndarray]:
         """Validation-detector phase: anomaly scores -> Eq. 1 trust
@@ -776,13 +824,16 @@ class FeelServer:
         det = self.defense.detector
         if det is None or acc_val is None or sel.size == 0:
             return None
-        anomaly = det.anomaly(acc_val)
-        flags = anomaly > 0
-        st = self._def_stats
-        st.n_flagged = int(flags.sum())
-        st.det_precision, st.det_recall = dfs.detection_stats(
-            flags, self._mal_mask[sel])
-        return det.weight * anomaly
+        with trace.span("defense.detect") as sp:
+            anomaly = det.anomaly(acc_val)
+            flags = anomaly > 0
+            st = self._def_stats
+            st.n_flagged = int(flags.sum())
+            st.det_precision, st.det_recall = dfs.detection_stats(
+                flags, self._mal_mask[sel])
+            if trace.enabled():
+                sp.set(n_flagged=st.n_flagged)
+            return det.weight * anomaly
 
     def _finalize_round(self, t: int, values, sched, sel, forced,
                         acc_local, acc_test, g_acc, src_acc,
@@ -790,21 +841,22 @@ class FeelServer:
                         g_loss=float("nan")) -> RoundLog:
         """Alg. 1 lines 15-16 + logging: detector penalty, reputation,
         staleness, RoundLog."""
-        penalty = self._detect(sel, acc_val)
-        if self.control == "batched":
-            st = self._control_state()
-            st.pull([self])
-            ctl.finalize_runs(st, [sel], [acc_local], [acc_test],
-                              penalties=[penalty])
-            st.push([self])
-        else:
-            self.reputation.update(sel, acc_local, acc_test,
-                                   penalty=penalty)
-            # ages: selected reset, others grow (staleness metric of Eq. 2)
-            self.ages += 1.0
-            self.ages[sel] = 1.0
-        return self._log_round(t, values, sched, sel, forced, g_acc,
-                               src_acc, atk_succ, g_loss)
+        with trace.span("finalize"):
+            penalty = self._detect(sel, acc_val)
+            if self.control == "batched":
+                st = self._control_state()
+                st.pull([self])
+                ctl.finalize_runs(st, [sel], [acc_local], [acc_test],
+                                  penalties=[penalty])
+                st.push([self])
+            else:
+                self.reputation.update(sel, acc_local, acc_test,
+                                       penalty=penalty)
+                # ages: selected reset, others grow (staleness of Eq. 2)
+                self.ages += 1.0
+                self.ages[sel] = 1.0
+            return self._log_round(t, values, sched, sel, forced, g_acc,
+                                   src_acc, atk_succ, g_loss)
 
     def _log_round(self, t: int, values, sched, sel, forced, g_acc,
                    src_acc, atk_succ=float("nan"),
@@ -835,9 +887,11 @@ class FeelServer:
         tasks without one). Attack success is the fraction of watched
         source units classified as the scenario's TARGET symbol (NaN
         without a watched pair)."""
-        return self.task.global_metrics(self.params, self.test, self._ex,
-                                        self._ey, self.watch_class,
-                                        self.watch_target)
+        with trace.span("eval.global"):
+            return self.task.global_metrics(self.params, self.test,
+                                            self._ex, self._ey,
+                                            self.watch_class,
+                                            self.watch_target)
 
     def _global_loss(self) -> float:
         """The task's global loss metric alone (the stacked sweep computes
@@ -845,15 +899,50 @@ class FeelServer:
         loss = self.task.eval_loss(self.params, self._ex)
         return float("nan") if loss is None else float(loss)
 
+    # ------------------------------------------------------------------ #
+    # Telemetry-only analytic cost estimates (DESIGN.md §14). Host
+    # metadata arithmetic (sizes, shapes) — never touches device values
+    # or the RNG stream; consumed by repro.obs.report's roofline context.
+    # ------------------------------------------------------------------ #
+    def _param_count(self) -> int:
+        if self._n_params is None:
+            self._n_params = int(sum(l.size for l in
+                                     jax.tree.leaves(self.params)))
+        return self._n_params
+
+    def _schedule_estimates(self) -> Dict[str, float]:
+        """~flops/bytes of one control-plane round over N candidates:
+        Eq. 2/3 elementwise (~40 flops/candidate), the ~64-probe Eq. 9
+        bisection, the N log N pack sort; ~12 f64 passes over the (N,)
+        control arrays."""
+        n = float(self.cfg.n_population)
+        flops = n * (40.0 + 64.0 * 8.0) + 2.0 * n * max(np.log2(n), 1.0)
+        return {"est_flops": float(flops), "est_bytes": float(8.0 * n * 12.0)}
+
+    def _train_estimates(self, sel: np.ndarray) -> Dict[str, float]:
+        """~flops/bytes of the round's local training: 6*P per
+        sample-step (fwd 2P + bwd 4P) over every real scheduled sample x
+        epochs; ~3 f32 param-array passes per batch step."""
+        p = float(self._param_count())
+        steps = float(self.sizes[sel].sum()) * self.cfg.local_epochs
+        batches = steps / max(self.batch_size, 1)
+        return {"est_flops": 6.0 * p * steps,
+                "est_bytes": 12.0 * p * max(batches, 1.0)}
+
     def run_round(self, t: int) -> RoundLog:
-        values, sched, sel, forced = self._schedule_round(t)
-        uploads, weights, acc_local, acc_test, acc_val = \
-            self._train_cohort(sel, t)
-        self._aggregate_uploads(sel, uploads, weights)
-        g_acc, g_loss, src_acc, atk_succ = self._global_metrics()
-        return self._finalize_round(t, values, sched, sel, forced,
-                                    acc_local, acc_test, g_acc, src_acc,
-                                    atk_succ, acc_val, g_loss)
+        with trace.span("round") as sp:
+            if trace.enabled():
+                sp.set(t=t, policy=self.policy, engine=self.engine,
+                       control=self.control)
+            values, sched, sel, forced = self._schedule_round(t)
+            uploads, weights, acc_local, acc_test, acc_val = \
+                self._train_cohort(sel, t)
+            self._aggregate_uploads(sel, uploads, weights)
+            g_acc, g_loss, src_acc, atk_succ = self._global_metrics()
+            return self._finalize_round(t, values, sched, sel, forced,
+                                        acc_local, acc_test, g_acc,
+                                        src_acc, atk_succ, acc_val,
+                                        g_loss)
 
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         assert self.cfg.mode == "sync", \

@@ -64,6 +64,7 @@ from repro.federated import cohort
 from repro.federated.async_engine import AsyncFeelEngine
 from repro.federated.server import FeelServer, build_cohort_data
 from repro.federated.task import FeelTask, as_task
+from repro.obs import trace
 
 
 def run_experiment(policy: str = "dqs",
@@ -148,14 +149,21 @@ def run_experiment(policy: str = "dqs",
                         adaptive_omega=adaptive_omega, scenario=scn,
                         engine=engine, control=control, defense=defense,
                         task=tsk)
-    if cfg.mode == "async":
-        # event-driven engine (federated/async_engine.py, DESIGN.md §13):
-        # one RoundLog per aggregation, plus the simulated-clock extras
-        eng = AsyncFeelEngine(server)
-        logs = eng.run(rounds)
-    else:
-        eng = None
-        logs = server.run(rounds)
+    with trace.span("experiment") as sp:
+        if trace.enabled():
+            sp.set(policy=policy, task=tsk.name, mode=cfg.mode,
+                   engine=engine, control=control)
+        if cfg.mode == "async":
+            # event-driven engine (federated/async_engine.py, DESIGN.md
+            # §13): one RoundLog per aggregation + simulated-clock extras
+            eng = AsyncFeelEngine(server)
+            logs = eng.run(rounds)
+        else:
+            eng = None
+            logs = server.run(rounds)
+        if trace.enabled():
+            for k, v in cohort.cache_sizes().items():
+                trace.gauge_set(f"compile.{k}", float(v))
     out = {
         "task": tsk.name,
         "scenario": scn.name,
@@ -523,6 +531,9 @@ def run_sweep(policies: Sequence[str], seeds: Sequence[int],
         for run in runs:
             for t in range(n_rounds):
                 run.server.run_round(t)
+    if trace.enabled():
+        for k, v in cohort.cache_sizes().items():
+            trace.gauge_set(f"compile.{k}", float(v))
 
     rows = [
         {"task": run.task.name,
@@ -662,45 +673,60 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
     """
     # -- phase A: schedules — one vmapped call for all runs ------------- #
     if sweep_ctrl is not None:
-        _schedule_runs_stacked(runs, sweep_ctrl, t)
+        with trace.span("schedule") as sp:
+            _schedule_runs_stacked(runs, sweep_ctrl, t)
+            if trace.enabled():
+                est = runs[0].server._schedule_estimates()
+                sp.set(t=t, runs=len(runs),
+                       est_flops=est["est_flops"] * len(runs),
+                       est_bytes=est["est_bytes"] * len(runs))
     else:
         for run in runs:
             run.plan = run.server._schedule_round(t)
 
     # -- phase B: train — per task, one call per (arrays, bucket) group - #
     for group in _by_task(runs):
-        _train_runs_stacked(group, t)
+        with trace.span("train") as sp:
+            _train_runs_stacked(group, t)
+            if trace.enabled():
+                ests = [r.server._train_estimates(r.plan[2])
+                        for r in group]
+                sp.set(task=group[0].task.name, runs=len(group),
+                       est_flops=sum(e["est_flops"] for e in ests),
+                       est_bytes=sum(e["est_bytes"] for e in ests))
 
     # -- phase C: evaluate uploads — one call per (task, seed) ---------- #
-    for group in _by_task_seed(runs):
-        stacks = [run.stacked for run in group]
-        masks = [run.server._eval_masks(run.plan[2], run.plan[2].size)
-                 for run in group]
-        counts = [run.plan[2].size for run in group]
-        accs = _eval_stacked(group[0].server, stacks, masks, counts)
-        for run, a in zip(group, accs):
-            run.acc_test = a
+    with trace.span("eval"):
+        for group in _by_task_seed(runs):
+            stacks = [run.stacked for run in group]
+            masks = [run.server._eval_masks(run.plan[2], run.plan[2].size)
+                     for run in group]
+            counts = [run.plan[2].size for run in group]
+            accs = _eval_stacked(group[0].server, stacks, masks, counts)
+            for run, a in zip(group, accs):
+                run.acc_test = a
 
     # -- phase C2: defense validation pass — the detector runs' uploads
     # AND their start-of-round global models scored on the held-out split
     # (per-UE unit masks) in one extra vmapped eval per (task, seed),
     # through the same machinery as phase C
-    for group in _by_task_seed(runs):
-        det_runs = [r for r in group
-                    if r.server.defense.detector is not None]
-        if not det_runs:
-            continue
-        stacks, masks, counts = [], [], []
-        for run in det_runs:
-            n = run.plan[2].size
-            vm = run.server._val_eval_masks(run.plan[2], n)
-            stacks += [run.stacked,
-                       cohort.broadcast_params(run.server.params, n)]
-            masks += [vm, vm]
-            counts += [n, n]
-        accs = _eval_stacked(det_runs[0].server, stacks, masks, counts)
-        for run, v, g in zip(det_runs, accs[::2], accs[1::2]):
-            run.acc_val = np.stack([v, g])
+    with trace.span("eval.validation"):
+        for group in _by_task_seed(runs):
+            det_runs = [r for r in group
+                        if r.server.defense.detector is not None]
+            if not det_runs:
+                continue
+            stacks, masks, counts = [], [], []
+            for run in det_runs:
+                n = run.plan[2].size
+                vm = run.server._val_eval_masks(run.plan[2], n)
+                stacks += [run.stacked,
+                           cohort.broadcast_params(run.server.params, n)]
+                masks += [vm, vm]
+                counts += [n, n]
+            accs = _eval_stacked(det_runs[0].server, stacks, masks, counts)
+            for run, v, g in zip(det_runs, accs[::2], accs[1::2]):
+                run.acc_val = np.stack([v, g])
 
     # -- phase D: per-run FedAvg (weights span the run's buckets) ------- #
     for run in runs:
@@ -717,29 +743,30 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
     # row — no wasted forward passes on rows whose result would be NaN
     # anyway. The task's loss metric (LM held-out CE) is one extra scalar
     # eval per run (free for loss-less tasks).
-    for group in _by_task_seed(runs):
-        ty = group[0].server._ey
-        ones = jnp.ones_like(ty, jnp.float32)
-        counts = [3 if run.scenario.watch else 1 for run in group]
-        stacks = [cohort.broadcast_params(run.server.params, c)
-                  for run, c in zip(group, counts)]
-        masks, ys = [], []
-        for run, c in zip(group, counts):
-            if c == 3:
-                wm = jnp.asarray(run.watch_mask)
-                masks.append(jnp.stack([ones, wm, wm]))
-                ys.append(jnp.stack([ty, ty, run.ty_target]))
-            else:
-                masks.append(ones[None])
-                ys.append(ty[None])
-        accs = _eval_stacked(group[0].server, stacks, masks, counts,
-                             ys=ys)
-        for run, c, a in zip(group, counts, accs):
-            run.g_acc = float(a[0])
-            run.g_loss = run.server._global_loss()
-            watched = c == 3 and bool(run.watch_mask.any())
-            run.src_acc = float(a[1]) if watched else float("nan")
-            run.atk_succ = float(a[2]) if watched else float("nan")
+    with trace.span("eval.global"):
+        for group in _by_task_seed(runs):
+            ty = group[0].server._ey
+            ones = jnp.ones_like(ty, jnp.float32)
+            counts = [3 if run.scenario.watch else 1 for run in group]
+            stacks = [cohort.broadcast_params(run.server.params, c)
+                      for run, c in zip(group, counts)]
+            masks, ys = [], []
+            for run, c in zip(group, counts):
+                if c == 3:
+                    wm = jnp.asarray(run.watch_mask)
+                    masks.append(jnp.stack([ones, wm, wm]))
+                    ys.append(jnp.stack([ty, ty, run.ty_target]))
+                else:
+                    masks.append(ones[None])
+                    ys.append(ty[None])
+            accs = _eval_stacked(group[0].server, stacks, masks, counts,
+                                 ys=ys)
+            for run, c, a in zip(group, counts, accs):
+                run.g_acc = float(a[0])
+                run.g_loss = run.server._global_loss()
+                watched = c == 3 and bool(run.watch_mask.any())
+                run.src_acc = float(a[1]) if watched else float("nan")
+                run.atk_succ = float(a[2]) if watched else float("nan")
 
     # -- phase F: detector penalties + reputation / staleness (one batched
     # Eq. 1 call) + logs
@@ -749,20 +776,22 @@ def _sweep_round_stacked(runs: List[_SweepRun], t: int,
         # log per run against the servers' refreshed state. Detector
         # penalties (host numpy from the phase-C2 accuracies) ride into
         # the same Eq. 1 kernel call.
-        ctl.finalize_runs(sweep_ctrl, [run.plan[2] for run in runs],
-                          [run.acc_local for run in runs],
-                          [run.acc_test for run in runs],
-                          penalties=[run.server._detect(run.plan[2],
-                                                        run.acc_val)
-                                     for run in runs])
-        sweep_ctrl.push([run.server for run in runs])
-        for run in runs:
-            values, sched, sel, forced = run.plan
-            run.server._log_round(t, values, sched, sel, forced,
-                                  run.g_acc, run.src_acc, run.atk_succ,
-                                  run.g_loss)
-            run.plan = run.stacked = run.acc_local = run.acc_test = None
-            run.acc_val = None
+        with trace.span("finalize"):
+            ctl.finalize_runs(sweep_ctrl, [run.plan[2] for run in runs],
+                              [run.acc_local for run in runs],
+                              [run.acc_test for run in runs],
+                              penalties=[run.server._detect(run.plan[2],
+                                                            run.acc_val)
+                                         for run in runs])
+            sweep_ctrl.push([run.server for run in runs])
+            for run in runs:
+                values, sched, sel, forced = run.plan
+                run.server._log_round(t, values, sched, sel, forced,
+                                      run.g_acc, run.src_acc,
+                                      run.atk_succ, run.g_loss)
+                run.plan = run.stacked = None
+                run.acc_local = run.acc_test = None
+                run.acc_val = None
     else:
         for run in runs:
             values, sched, sel, forced = run.plan

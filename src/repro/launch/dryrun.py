@@ -19,7 +19,7 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
 import argparse          # noqa: E402
 import functools         # noqa: E402
 import json              # noqa: E402
-import time              # noqa: E402
+from repro.obs.clock import wall_clock  # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
@@ -57,7 +57,7 @@ def _act_specs(mesh, shape_kind, batch_shardable=True):
 def _compile_one(cfg, shape, mesh, optimizer: str, extra_specs_fn=None):
     """Lower + compile one (cfg, shape) on mesh. Returns (compiled, t_lower,
     t_compile)."""
-    t0 = time.time()
+    t0 = wall_clock()
     params_sds = jax.eval_shape(functools.partial(api.init, cfg),
                                 jax.random.PRNGKey(0))
     pspecs = param_specs(cfg, params_sds, mesh)
@@ -106,9 +106,9 @@ def _compile_one(cfg, shape, mesh, optimizer: str, extra_specs_fn=None):
             with mesh, activation_specs(_act_specs(mesh, shape.kind,
                                                    batch_shardable)):
                 lowered = jit_fn.lower(*args)
-                t_lower = time.time() - t0
+                t_lower = wall_clock() - t0
                 compiled = lowered.compile()
-                t_compile = time.time() - t0 - t_lower
+                t_compile = wall_clock() - t0 - t_lower
             return compiled, t_lower, t_compile
 
     specs = _act_specs(mesh, shape.kind, batch_shardable)
@@ -116,9 +116,9 @@ def _compile_one(cfg, shape, mesh, optimizer: str, extra_specs_fn=None):
         specs.update(extra_specs_fn(mesh, cfg) or {})
     with mesh, activation_specs(specs):
         lowered = jax.jit(fn).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = wall_clock() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = wall_clock() - t0 - t_lower
     return compiled, t_lower, t_compile
 
 

@@ -84,7 +84,15 @@ def main(argv=None) -> int:
                     help="AR(1) channel correlation rho (0 = memoryless)")
     ap.add_argument("--json", dest="as_json", action="store_true",
                     help="emit the full result dict as JSON on stdout")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the span tracer (DESIGN.md §14) and write "
+                         "the JSONL trace to PATH; inspect with "
+                         "python -m repro.obs.report PATH")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import trace
+        trace.configure(enabled=True)
 
     cfg = FeelConfig()
     over = {}
@@ -103,6 +111,9 @@ def main(argv=None) -> int:
                    staleness=args.staleness,
                    latency_scale=args.latency_scale,
                    channel_corr=args.channel_corr, cfg=cfg)
+    if args.trace:
+        from repro.obs import trace
+        trace.flush_jsonl(args.trace)
     if args.as_json:
         print(json.dumps(res))
         return 0

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +23,7 @@ from repro.data.tokens import batches, make_stream
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import init_state, make_train_step
 from repro.models import api
+from repro.obs.clock import wall_clock
 from repro.sharding import (activation_specs, batch_specs, opt_state_specs,
                             param_specs)
 
@@ -87,7 +87,7 @@ def main():
 
         stream = make_stream(max(200_000, 2 * B * S), cfg.vocab_size, seed=0)
         it = batches(stream, B, S, np.random.default_rng(0))
-        t0 = time.time()
+        t0 = wall_clock()
         for i in range(args.steps):
             host = next(it)
             batch = {"tokens": jax.device_put(
@@ -96,7 +96,7 @@ def main():
                                                     batch)
             if i % 10 == 0 or i == args.steps - 1:
                 print(f"step {int(step):6d} loss={float(m['loss']):.4f} "
-                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
+                      f"({(wall_clock()-t0)/(i+1):.2f}s/step)")
             if args.ckpt and (i + 1) % args.ckpt_every == 0:
                 save(args.ckpt, int(step), (params, opt_state, step))
     print("done")

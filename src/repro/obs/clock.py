@@ -1,0 +1,27 @@
+"""The repo's only sanctioned wall-clock site (DESIGN.md §14).
+
+Everything under ``src/repro`` that wants real time goes through
+``wall_clock()`` — the ``repro.check`` nondeterminism lint rejects
+direct ``time.time`` / ``time.perf_counter`` / ``time.monotonic``
+calls anywhere else in the package.  The clock is monotonic: telemetry
+measures durations, never calendar time, so suspend/NTP steps cannot
+produce negative spans.
+
+``utc_stamp()`` exists for sink *metadata only* (trace files are keyed
+commit+env+timestamp the way ``BENCH_history.jsonl`` lines are); it
+must never feed a traced value or a simulation input.
+"""
+from __future__ import annotations
+
+import datetime
+import time
+
+
+def wall_clock() -> float:
+    """Monotonic wall-clock seconds (arbitrary epoch, durations only)."""
+    return time.monotonic()
+
+
+def utc_stamp() -> str:
+    """ISO-8601 UTC timestamp for sink metadata records."""
+    return datetime.datetime.now(datetime.timezone.utc).isoformat()

@@ -23,9 +23,10 @@ from hypothesis_compat import given, settings, st
 from repro.check import CHECKERS, run_checks
 from repro.check.__main__ import main as check_main
 from repro.check.common import SourceFile, parse_waivers
-from repro.check.lints import (lint_dtype_f64, lint_masked_mean,
-                               lint_nondeterminism, lint_oracle_purity,
-                               lint_tracer_leak)
+from repro.check.lints import (check_nondeterminism, lint_dtype_f64,
+                               lint_masked_mean, lint_nondeterminism,
+                               lint_oracle_purity, lint_tracer_leak,
+                               lint_wall_clock)
 from repro.check.registry import kernel_ref_twins, registry_coverage
 from repro.check.trace import (_static_spec_literal, assert_f64_outputs,
                                assert_no_f64)
@@ -72,6 +73,19 @@ def test_async_plane_revived_serve_launcher():
     inv = run_checks().inventory
     dead = {m["module"] for m in inv["dead"]}
     for mod in ("repro.launch.serve", "repro.federated.async_engine"):
+        assert mod not in dead, f"{mod} regressed to dead inheritance"
+
+
+def test_observability_plane_live_obs_and_roofline():
+    """PR 10 (DESIGN.md §14) built the obs package and wired
+    launch/roofline.py into a production consumer (repro.obs.report's
+    roofline context) — all of it must be LIVE in the dead-inheritance
+    inventory, or the telemetry plane silently lost its last caller."""
+    inv = run_checks().inventory
+    dead = {m["module"] for m in inv["dead"]}
+    for mod in ("repro.obs", "repro.obs.trace", "repro.obs.clock",
+                "repro.obs.metrics", "repro.obs.report",
+                "repro.launch.roofline"):
         assert mod not in dead, f"{mod} regressed to dead inheritance"
 
 
@@ -232,9 +246,67 @@ def test_nondeterminism_catches_wall_clock_in_async_engine_style_code():
     assert any("sleep" in v.message for v in vs)
     assert any("time.time" in v.message for v in vs)
     assert _in_scope(bad)
-    # launch/ is host tooling — the driver may time its own wall-clock
+    # launch/ is outside the SIMULATION lint's scope (ad-hoc seeds are
+    # fine there) — but the wall-clock half still applies repo-wide
+    # through lint_wall_clock (tests below)
     assert not _in_scope(SourceFile.from_text(
         "x = 1", rel="src/repro/launch/serve.py"))
+
+
+def test_wall_clock_lint_outside_sanctioned_site():
+    """Telemetry contract (DESIGN.md §14): direct time-module clock
+    reads anywhere under src/repro are violations EXCEPT in
+    obs/clock.py — host tooling routes through
+    ``repro.obs.clock.wall_clock``."""
+    bad = SourceFile.from_text(textwrap.dedent("""
+        import time
+
+        def timed():
+            return time.perf_counter()
+    """), rel="src/repro/launch/serve.py")
+    vs = lint_wall_clock(bad)
+    assert len(vs) == 1 and vs[0].rule == "nondeterminism"
+    assert "repro.obs.clock" in vs[0].message
+    # the from-import alias form is caught too
+    alias = SourceFile.from_text(textwrap.dedent("""
+        from time import monotonic
+
+        def timed():
+            return monotonic()
+    """), rel="src/repro/launch/dryrun.py")
+    assert len(lint_wall_clock(alias)) == 1
+    # no time import at all -> clean
+    assert lint_wall_clock(SourceFile.from_text(
+        "x = 1", rel="src/repro/launch/serve.py")) == []
+    # the shared rule id means the existing waiver mechanism covers the
+    # repo-wide rule too
+    waived = SourceFile.from_text(textwrap.dedent("""
+        import time
+
+        def timed():
+            # repro: allow(nondeterminism)
+            return time.time()
+    """), rel="src/repro/launch/serve.py")
+    assert lint_wall_clock(waived) == []
+
+
+def test_check_nondeterminism_exempts_only_obs_clock():
+    """check_nondeterminism dispatch: simulation dirs get the full
+    lint, every other src/repro file gets the wall-clock half, and
+    obs/clock.py — the one sanctioned site — is exempt."""
+    code = "import time\n\ndef t():\n    return time.monotonic()\n"
+
+    def ctx(rel):
+        return types.SimpleNamespace(
+            sources=[SourceFile.from_text(code, rel=rel)])
+
+    assert check_nondeterminism(ctx("src/repro/obs/clock.py")) == []
+    assert len(check_nondeterminism(ctx("src/repro/obs/trace.py"))) == 1
+    assert len(check_nondeterminism(
+        ctx("src/repro/launch/serve.py"))) == 1
+    assert len(check_nondeterminism(
+        ctx("src/repro/federated/server.py"))) == 1     # full sim lint
+    assert check_nondeterminism(ctx("tests/whatever.py")) == []
 
 
 def test_waiver_comment_suppresses_rule():
